@@ -1,0 +1,74 @@
+"""Paper Table 1: pJDS data reduction vs ELLPACK + spMVM performance.
+
+For each of the five test-matrix analogues (HMEp, sAMG, DLR1, DLR2,
+UHBR):
+* data reduction of pJDS vs ELLPACK (the paper's memory column; paper
+  measured 19-71%),
+* measured spMVM wall-time of the jitted pJDS and ELLPACK-R operators on
+  THIS host (CPU, so absolute GF/s are not Fermi numbers; the
+  FORMAT-vs-FORMAT ratio is the comparable quantity),
+* model-predicted TPU v5e GF/s from the paper's code balance (Eq. 1) at
+  both alpha bounds — the number the roofline analysis targets.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats as F, matrices as M, perf_model as PM
+from repro.kernels import ops
+from .common import time_fn, csv_row
+
+SCALES = {"HMEp": 0.004, "sAMG": 0.007, "DLR1": 0.08, "DLR2": 0.04,
+          "UHBR": 0.005}
+
+
+def run(print_rows=True):
+    rows = []
+    for name, scale in SCALES.items():
+        m = M.make_test_matrix(name, scale=scale)
+        n = m.shape[0]
+        red = F.data_reduction_vs_ellpack(m, b_r=128)
+
+        pj = F.csr_to_pjds(m, b_r=128)
+        pdev = ops.to_device_pjds(pj)
+        ell = F.csr_to_ell(m, row_align=128)
+        edev = ops.to_device_ell(ell)
+        rng = np.random.default_rng(0)
+        xp = jnp.asarray(pj.permute(rng.standard_normal(n).astype(np.float32)))
+        xe = jnp.asarray(np.resize(np.asarray(xp), ell.n_rows_pad))
+
+        import jax
+        f_p = jax.jit(lambda x: ops.pjds_matvec(pdev, x))
+        f_e = jax.jit(lambda x: ops.ell_matvec(edev, x))
+        t_p = time_fn(f_p, xp)
+        t_e = time_fn(f_e, xe)
+        gf_p = 2 * m.nnz / t_p / 1e9
+        gf_e = 2 * m.nnz / t_e / 1e9
+
+        # model-predicted TPU v5e spMVM GF/s (DP) at the two alpha bounds
+        lo_a, hi_a = PM.alpha_range(m.n_nzr)
+        gf_best = PM.TPU_V5E.hbm_bw / PM.code_balance(lo_a, m.n_nzr) / 1e9
+        gf_worst = PM.TPU_V5E.hbm_bw / PM.code_balance(hi_a, m.n_nzr) / 1e9
+
+        rows.append(dict(
+            name=name, n=n, nnz=m.nnz, n_nzr=round(m.n_nzr, 1),
+            reduction_pct=round(100 * red, 1),
+            cpu_pjds_gfs=round(gf_p, 3), cpu_ellr_gfs=round(gf_e, 3),
+            pjds_vs_ellr=round(gf_p / gf_e, 2),
+            tpu_pred_gfs_best=round(gf_best, 1),
+            tpu_pred_gfs_worst=round(gf_worst, 1),
+            us_per_call=t_p * 1e6,
+        ))
+        if print_rows:
+            r = rows[-1]
+            print(csv_row(
+                f"table1_{name}", r["us_per_call"],
+                f"reduction={r['reduction_pct']}% "
+                f"pjds/ellr={r['pjds_vs_ellr']} "
+                f"tpu_pred={r['tpu_pred_gfs_worst']}-{r['tpu_pred_gfs_best']}GF/s"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,87 @@
+"""Per-kernel microbenchmarks + the chunk_l / b_r trade-off study.
+
+Wall-times are from the jitted REF path (the Pallas kernels execute in
+interpret mode on CPU — Python per grid step — so their wall-time is not
+meaningful; their correctness is covered by tests).  What IS meaningful
+here and transfers to TPU:
+* padding overhead as a function of (b_r, diag_align/chunk_l) — the
+  structural cost of bigger VMEM tiles,
+* the arithmetic-intensity jump from spMVM to multi-RHS spMM (the
+  SparseFFN case), straight from the byte/flop model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats as F, matrices as M, perf_model as PM
+from repro.kernels import ops
+from .common import time_fn, csv_row
+
+
+def run(print_rows=True):
+    rows = []
+    m = M.uhbr(scale=0.003)
+    n = m.shape[0]
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(n).astype(np.float32)
+
+    # --- b_r x diag_align padding overhead (storage elements vs nnz) ----
+    for b_r in (32, 128, 256):
+        for diag_align in (8, 64):
+            pj = F.csr_to_pjds(m, b_r=b_r, diag_align=diag_align)
+            over = F.storage_elements(pj) / m.nnz - 1
+            rows.append(dict(kind="padding", b_r=b_r, diag_align=diag_align,
+                             overhead=over))
+            if print_rows:
+                print(csv_row(f"pad_br{b_r}_align{diag_align}", 0.0,
+                              f"padding_overhead={100*over:.2f}%"))
+
+    # --- spmv vs spmm arithmetic intensity (model) + measured ref time --
+    pj = F.csr_to_pjds(m, b_r=128, diag_align=8)
+    dev = ops.to_device_pjds(pj)
+    xp = jnp.asarray(pj.permute(x))
+    f_mv = jax.jit(lambda v: ops.pjds_matvec(dev, v))
+    t_mv = time_fn(f_mv, xp)
+    rows.append(dict(kind="spmv", t_us=t_mv * 1e6,
+                     gfs=2 * m.nnz / t_mv / 1e9))
+    if print_rows:
+        print(csv_row("pjds_spmv_ref", t_mv * 1e6,
+                      f"{rows[-1]['gfs']:.2f}GF/s"))
+    for n_rhs in (8, 64):
+        xs = jnp.asarray(
+            rng.standard_normal((pj.n_rows_pad, n_rhs)).astype(np.float32))
+        f_mm = jax.jit(lambda v: ops.pjds_matmat(dev, v))
+        t_mm = time_fn(f_mm, xs)
+        # intensity: flops / matrix bytes (values+idx), RHS amortised
+        inten = 2 * n_rhs / 8.0
+        rows.append(dict(kind=f"spmm{n_rhs}", t_us=t_mm * 1e6,
+                         gfs=2 * m.nnz * n_rhs / t_mm / 1e9,
+                         intensity=inten))
+        if print_rows:
+            print(csv_row(f"pjds_spmm_rhs{n_rhs}", t_mm * 1e6,
+                          f"{rows[-1]['gfs']:.2f}GF/s intensity={inten:.0f}F/B"))
+
+    # --- ELLPACK-R vs pJDS on a high-variance matrix (the paper's win) --
+    ms = M.samg(scale=0.004)
+    pj2 = F.csr_to_pjds(ms, b_r=128)
+    ell2 = F.csr_to_ell(ms, row_align=128)
+    d_p = ops.to_device_pjds(pj2)
+    d_e = ops.to_device_ell(ell2)
+    x2 = rng.standard_normal(ms.shape[0]).astype(np.float32)
+    xp2 = jnp.asarray(pj2.permute(x2))
+    xe2 = jnp.asarray(np.resize(x2, ell2.n_rows_pad))
+    t_p = time_fn(jax.jit(lambda v: ops.pjds_matvec(d_p, v)), xp2)
+    t_e = time_fn(jax.jit(lambda v: ops.ell_matvec(d_e, v)), xe2)
+    stored_ratio = F.storage_elements(ell2) / F.storage_elements(pj2)
+    rows.append(dict(kind="pjds_vs_ellr", speedup=t_e / t_p,
+                     stored_ratio=stored_ratio))
+    if print_rows:
+        print(csv_row("pjds_vs_ellr_samg", t_p * 1e6,
+                      f"speedup={t_e/t_p:.2f}x stored_ratio={stored_ratio:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,108 @@
+"""Paper Fig. 5: strong scaling of distributed spMVM, three comm modes.
+
+Runs in a subprocess with 8 host devices (this process keeps 1 device)
+and measures wall-time per spMVM for DLR1/UHBR analogues on 1/2/4/8
+devices x {vector, naive, overlap}.  Host-CPU collectives through shared
+memory are not an ICI fabric, so (as in the paper's own CPU-vs-GPU
+caveats) the MODE-vs-MODE and scaling TRENDS are the comparable
+quantities.  Alongside, the paper's performance model predicts the
+strong-scaling curve for the TPU v5e target out to 32 chips: T(P) =
+max(T_mvm/P, T_halo) for task mode, sum for vector mode (paper §3.1:
+"the possible performance benefit can be at most a factor of two")."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.core import perf_model as PM
+from .common import csv_row
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, time
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core import matrices as M, dist_spmv as D
+    from repro.launch.mesh import make_host_mesh
+
+    out = []
+    rng = np.random.default_rng(0)
+    for name, scale in [("DLR1", 0.15), ("UHBR", 0.01)]:
+        m = M.make_test_matrix(name, scale=scale)
+        for n_dev in (1, 2, 4, 8):
+            mesh = make_host_mesh(n_dev)
+            dist = D.partition_csr(m, n_dev, b_r=128)
+            x = np.zeros(dist.n_global_pad, np.float32)
+            x[:m.n_rows] = rng.standard_normal(m.n_rows)
+            xj = jax.device_put(jnp.asarray(x),
+                                jax.NamedSharding(mesh, P("data")))
+            for mode in ("vector", "naive", "overlap"):
+                mv = jax.jit(D.make_dist_matvec(dist, mesh, "data", mode))
+                for _ in range(3):
+                    jax.block_until_ready(mv(xj))
+                ts = []
+                for _ in range(10):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(mv(xj))
+                    ts.append(time.perf_counter() - t0)
+                t = float(np.median(ts))
+                out.append(dict(matrix=name, n_dev=n_dev, mode=mode,
+                                t_us=t * 1e6,
+                                gfs=2 * m.nnz / t / 1e9,
+                                halo_w=dist.halo_w, nnz=int(m.nnz)))
+    print("RESULTS " + json.dumps(out))
+""")
+
+
+def _measured():
+    env = dict(os.environ, PYTHONPATH=os.path.join(
+        os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SCRIPT], capture_output=True,
+                       text=True, env=env, timeout=560)
+    if r.returncode != 0:
+        raise RuntimeError(r.stderr[-2000:])
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULTS ")][-1]
+    return json.loads(line[len("RESULTS "):])
+
+
+def _model_curve(n_rows, n_nzr, chips=(1, 2, 4, 8, 16, 32)):
+    """TPU v5e predicted strong scaling (DP), task vs vector mode."""
+    spec = PM.TPU_V5E
+    rows = []
+    for p in chips:
+        t_mvm = PM.t_mvm(n_rows / p, n_nzr, alpha=1 / n_nzr,
+                         dev_bw=spec.hbm_bw)
+        t_halo = PM.t_link(n_rows / p, spec.ici_bw)  # halo ~ slice-sized
+        task = max(t_mvm, t_halo)
+        vector = t_mvm + t_halo
+        rows.append(dict(chips=p,
+                         task_gfs=2 * n_rows * n_nzr / task / 1e9,
+                         vector_gfs=2 * n_rows * n_nzr / vector / 1e9))
+    return rows
+
+
+def run(print_rows=True):
+    rows = {"measured": _measured(),
+            "model_dlr1": _model_curve(280_000, 144),
+            "model_uhbr": _model_curve(4_500_000, 123)}
+    if print_rows:
+        for r in rows["measured"]:
+            print(csv_row(
+                f"fig5_{r['matrix']}_p{r['n_dev']}_{r['mode']}",
+                r["t_us"], f"{r['gfs']:.2f}GF/s halo_w={r['halo_w']}"))
+        for key in ("model_dlr1", "model_uhbr"):
+            for r in rows[key]:
+                print(csv_row(
+                    f"fig5_model_{key[6:]}_p{r['chips']}", 0.0,
+                    f"task={r['task_gfs']:.0f}GF/s "
+                    f"vector={r['vector_gfs']:.0f}GF/s"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

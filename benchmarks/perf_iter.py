@@ -1,0 +1,107 @@
+"""§Perf hillclimbing harness: re-lower a cell with a knob changed and
+diff the roofline terms against the recorded baseline.
+
+    PYTHONPATH=src python -m benchmarks.perf_iter \
+        --arch deepseek-moe-16b --shape train_4k \
+        --tag onehot --set moe_dispatch=onehot
+
+Knobs: --attn-impl pairs|qloop, --q-chunk N, --k-chunk N, and
+--set field=value for any ArchConfig field (type-coerced).  Results land
+in experiments/perf/<arch>__<shape>__<tag>.json.
+"""
+from __future__ import annotations
+
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+
+from repro import configs
+from repro.core import perf_model as PM
+
+
+def term_row(cost: dict, tokens: int, chips: int, n_active: int,
+             kind: str) -> dict:
+    r = PM.roofline_terms(cost["flops"], cost["bytes"],
+                          cost["collective_bytes"], chips=1)
+    mult = 6 if kind == "train" else 2
+    model_flops = mult * n_active * tokens / chips
+    bound = r.bound_s
+    return dict(compute_s=r.compute_s, memory_s=r.memory_s,
+                collective_s=r.collective_s, dominant=r.dominant,
+                bound_s=bound,
+                roofline_fraction=(model_flops / PM.TPU_V5E.peak_flops)
+                / bound if bound else 0.0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--attn-impl", default="pairs")
+    ap.add_argument("--q-chunk", type=int, default=512)
+    ap.add_argument("--k-chunk", type=int, default=512)
+    ap.add_argument("--set", action="append", default=[],
+                    help="ArchConfig field override: name=value")
+    ap.add_argument("--baseline-dir", default="experiments/dryrun/single")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import dryrun_cell
+
+    overrides = {}
+    cfg = configs.get(args.arch)
+    for s in args.set:
+        name, val = s.split("=", 1)
+        cur = getattr(cfg, name)
+        if isinstance(cur, bool):
+            val = val.lower() in ("1", "true", "yes")
+        elif isinstance(cur, int):
+            val = int(val)
+        elif isinstance(cur, float):
+            val = float(val)
+        overrides[name] = val
+
+    rec = dryrun_cell(args.arch, args.shape, "single",
+                      q_chunk=args.q_chunk, k_chunk=args.k_chunk,
+                      attn_impl=args.attn_impl, overrides=overrides)
+    os.makedirs(args.out, exist_ok=True)
+    fname = os.path.join(args.out,
+                         f"{args.arch}__{args.shape}__{args.tag}.json")
+    with open(fname, "w") as f:
+        json.dump(rec, f, indent=1)
+
+    if rec["status"] != "ok":
+        print(f"STATUS {rec['status']}: {rec.get('error','')[:400]}")
+        return
+
+    new = term_row(rec["cost"], rec["tokens"], rec["chips"],
+                   rec["n_active_params"],
+                   "train" if args.shape.startswith("train") else "other")
+    base_f = os.path.join(args.baseline_dir,
+                          f"{args.arch}__{args.shape}.json")
+    print(f"== {args.arch} / {args.shape} / {args.tag} ==")
+    if os.path.exists(base_f):
+        base_rec = json.load(open(base_f))
+        if base_rec.get("cost"):
+            base = term_row(base_rec["cost"], base_rec["tokens"],
+                            base_rec["chips"], base_rec["n_active_params"],
+                            "train" if args.shape.startswith("train")
+                            else "other")
+            for k in ("compute_s", "memory_s", "collective_s", "bound_s",
+                      "roofline_fraction"):
+                delta = (new[k] - base[k]) / base[k] * 100 if base[k] else 0
+                print(f"{k:18s} base={base[k]:.5f} new={new[k]:.5f} "
+                      f"({delta:+.1f}%)")
+            print(f"dominant: {base['dominant']} -> {new['dominant']}")
+            return
+    for k, v in new.items():
+        print(f"{k:18s} {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Deliverable (g): three-term roofline per (arch x shape) from the
+dry-run artifacts in experiments/dryrun/single/.
+
+    compute    = HLO_FLOPs(global)      / (chips * peak_FLOP/s)
+    memory     = HLO_bytes(global)      / (chips * HBM_bw)
+    collective = collective_bytes(glob) / (chips * link_bw)
+
+Dry-run cost numbers are PER-DEVICE (the partitioned module), so global
+= per_device * chips; the two 'chips' cancel and each term is simply
+per_device_quantity / per_chip_rate.  MODEL_FLOPS = 6*N*D (dense) or
+6*N_active*D (MoE) for the useful-compute ratio.  ``hlo_bytes`` comes
+from HloCostAnalysis "bytes accessed", which counts every op's operands:
+an UPPER bound on HBM traffic (fusion-aware but DUS-pessimistic); the
+memory term is therefore conservative and flagged as such.
+
+Usage: python -m benchmarks.roofline [--dir experiments/dryrun/single]
+writes experiments/roofline.md + .json and prints the CSV.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.core import perf_model as PM
+
+
+def load_cells(d: str):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def analyze(rec: dict) -> dict | None:
+    if rec.get("status") != "ok" or "cost" not in rec:
+        return None
+    c = rec["cost"]
+    # cost numbers are per-device; roofline terms divide by per-chip rates
+    r = PM.roofline_terms(
+        hlo_flops=c["flops"], hlo_bytes=c["bytes"],
+        collective_bytes=c["collective_bytes"], chips=1)
+    tokens = rec["tokens"]
+    chips = rec["chips"]
+    n = rec["n_active_params"]
+    kind_mult = 6 if "train" in rec["shape"] else 2
+    model_flops = kind_mult * n * tokens / chips    # per device
+    bound = r.bound_s
+    useful = model_flops / PM.TPU_V5E.peak_flops    # ideal compute-only time
+    return dict(
+        arch=rec["arch"], shape=rec["shape"],
+        compute_s=r.compute_s, memory_s=r.memory_s,
+        collective_s=r.collective_s, dominant=r.dominant,
+        bound_s=bound,
+        model_flops_ratio=model_flops / max(c["flops"], 1),
+        roofline_fraction=useful / bound if bound else 0.0,
+        temp_gib=rec["memory"].get("temp_size_in_bytes", 0) / 2 ** 30,
+        arg_gib=rec["memory"].get("argument_size_in_bytes", 0) / 2 ** 30,
+        compile_s=rec["compile_s"],
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun/single")
+    ap.add_argument("--out", default="experiments/roofline")
+    args = ap.parse_args()
+    cells = load_cells(args.dir)
+    rows, skipped, errors = [], [], []
+    for rec in cells:
+        if rec.get("status") == "skipped":
+            skipped.append(rec)
+            continue
+        if rec.get("status") == "error":
+            errors.append(rec)
+            continue
+        a = analyze(rec)
+        if a:
+            rows.append(a)
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| 6ND/HLO | roofline frac | temp GiB/dev |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} "
+            f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+            f"| **{r['dominant']}** | {r['model_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.2f} | {r['temp_gib']:.2f} |")
+    for s in skipped:
+        lines.append(f"| {s['arch']} | {s['shape']} | — | — | — | skipped: "
+                     f"{s['reason']} | — | — | — |")
+    md = "\n".join(lines)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out + ".md", "w") as f:
+        f.write(md + "\n")
+    with open(args.out + ".json", "w") as f:
+        json.dump(rows, f, indent=1)
+    print(md)
+    if errors:
+        print(f"\n# {len(errors)} cells errored:")
+        for e in errors:
+            print(f"#  {e['arch']}/{e['shape']}: {e.get('error','')[:120]}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

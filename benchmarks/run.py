@@ -1,0 +1,48 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Heavy multi-device cases
+run in subprocesses so this process keeps one device.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,fig3,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,fig3,eq,scaling,kernels")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import (bench_formats, bench_histograms, bench_perf_model,
+                   bench_scaling, bench_kernels, bench_sparse_ffn)
+    suites = [
+        ("table1", bench_formats.run),      # paper Table 1
+        ("fig3", bench_histograms.run),     # paper Fig. 3
+        ("eq", bench_perf_model.run),       # paper Eq. 1-4
+        ("kernels", bench_kernels.run),     # kernel study
+        ("sparse_ffn", bench_sparse_ffn.run),  # beyond-paper: pJDS in LMs
+        ("scaling", bench_scaling.run),     # paper Fig. 5
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in suites:
+        if only and name not in only:
+            continue
+        try:
+            fn(print_rows=True)
+        except Exception:
+            failed += 1
+            print(f"{name},0,FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

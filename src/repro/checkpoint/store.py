@@ -1,0 +1,132 @@
+"""Fault-tolerant sharded checkpointing with elastic restore.
+
+Layout:  <dir>/step_<N>/
+             manifest.json     tree structure, shapes, dtypes, shardings
+             leaf_<i>.npy      one file per pytree leaf
+             _COMMITTED        written last -> atomic visibility
+
+Properties needed at 1000+ nodes, scaled to this box:
+* **Atomic commit** — writers stage into ``step_N.tmp`` and rename; a
+  crash mid-save never corrupts the latest checkpoint; ``latest_step``
+  only considers committed dirs.
+* **Async save** — ``save_async`` snapshots to host memory synchronously
+  (device_get) and writes in a background thread, so the train loop
+  blocks only for the copy, not the I/O.
+* **Elastic restore** — leaves are stored unsharded; ``restore`` takes a
+  target sharding tree for the CURRENT mesh, so a job restarted on a
+  different topology (node failure, pod shrink) re-shards transparently.
+  (At real scale each host writes its shard slice; the manifest format
+  already records the source PartitionSpec for that extension.)
+* Data-pipeline state and the step counter ride along -> exact resume.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, step: int, tree: Any, extra: Optional[dict] = None,
+         spec_tree: Any = None) -> str:
+    """Synchronous atomic save. Returns the committed directory."""
+    leaves, treedef = _leaf_paths(tree)
+    host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+    return _write(path, step, host_leaves, treedef, extra, spec_tree)
+
+
+def _write(path, step, host_leaves, treedef, extra, spec_tree):
+    final = os.path.join(path, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "leaves": [{"file": f"leaf_{i}.npy", "shape": list(x.shape),
+                    "dtype": str(x.dtype)} for i, x in enumerate(host_leaves)],
+        "extra": extra or {},
+        "specs": jax.tree.map(
+            lambda s: list(s), spec_tree,
+            is_leaf=lambda s: isinstance(s, tuple)) if spec_tree else None,
+    }
+    for i, x in enumerate(host_leaves):
+        np.save(os.path.join(tmp, f"leaf_{i}.npy"), x)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+class AsyncCheckpointer:
+    """Snapshot synchronously, write in a background thread."""
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, path: str, step: int, tree: Any,
+             extra: Optional[dict] = None, spec_tree: Any = None) -> None:
+        self.wait()
+        leaves, treedef = _leaf_paths(tree)
+        host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+        self._thread = threading.Thread(
+            target=_write, args=(path, step, host_leaves, treedef, extra,
+                                 spec_tree), daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    best = None
+    for d in os.listdir(path):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            full = os.path.join(path, d)
+            if os.path.exists(os.path.join(full, "_COMMITTED")):
+                best = max(best or -1, int(d[5:]))
+    return best
+
+
+def restore(path: str, step: int, target_tree: Any,
+            shardings: Any = None) -> tuple[Any, dict]:
+    """Restore into the structure of ``target_tree`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: optional matching tree of
+    NamedShardings for the CURRENT mesh (elastic restore)."""
+    d = os.path.join(path, f"step_{step:010d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = jax.tree.flatten(target_tree)
+    if len(leaves) != len(manifest["leaves"]):
+        raise ValueError(
+            f"checkpoint has {len(manifest['leaves'])} leaves, "
+            f"target expects {len(leaves)}")
+    host = [np.load(os.path.join(d, m["file"]))
+            for m in manifest["leaves"]]
+    shard_leaves = (jax.tree.leaves(
+        shardings, is_leaf=lambda s: hasattr(s, "spec"))
+        if shardings is not None else [None] * len(host))
+    out = []
+    for x, tgt, sh in zip(host, leaves, shard_leaves):
+        arr = x.astype(tgt.dtype) if hasattr(tgt, "dtype") else x
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.numpy.asarray(arr))
+    return treedef.unflatten(out), manifest["extra"]

@@ -1,0 +1,173 @@
+"""The paper's performance models (Eq. 1-4), retargeted at TPU v5e.
+
+Paper (Fermi GPU)                    ->  here (TPU v5e target)
+  B_GPU   device-memory bandwidth        HBM_BW       = 819 GB/s
+  B_PCI   host link bandwidth            ICI_LINK_BW  = 50 GB/s  (per link)
+  SP/DP peak                             PEAK_FLOPS   = 197e12 bf16 / chip
+
+Eq. (1): worst-case code balance of the ELLPACK/pJDS kernel,
+    B_W^DP = (6 + 4*alpha + 8/N_nzr_max) bytes/flop
+with alpha in [1/N_nzr, 1] the RHS cache-reuse parameter.  On TPU the
+pJDS kernel keeps the local RHS slice resident in VMEM, which *enforces*
+the alpha -> 1/N_nzr limit for the distributed blocks (DESIGN.md §2).
+
+Eq. (2)-(4): device-vs-link time model.  The paper derives the range of
+N_nzr for which accelerator spMVM is worthwhile given the ratio
+B_dev/B_link; identical math bounds when a TPU chip's spMVM is worth the
+ICI halo traffic.
+
+Also hosts the three-term roofline used by EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = [
+    "TPUSpec",
+    "TPU_V5E",
+    "code_balance",
+    "alpha_range",
+    "t_mvm",
+    "t_link",
+    "n_nzr_upper_for_link_penalty",
+    "n_nzr_lower_for_link_penalty",
+    "spmvm_flops",
+    "spmvm_bytes",
+    "roofline_terms",
+    "RooflineReport",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUSpec:
+    name: str
+    peak_flops: float        # FLOP/s per chip (bf16 MXU)
+    peak_flops_f32: float    # FLOP/s per chip (f32 VPU-bound spMVM path)
+    hbm_bw: float            # bytes/s per chip
+    ici_bw: float            # bytes/s per link
+    vmem_bytes: int
+    hbm_bytes: int
+
+
+TPU_V5E = TPUSpec(
+    name="tpu-v5e",
+    peak_flops=197e12,
+    peak_flops_f32=197e12 / 4,  # f32 through the MXU at quarter rate
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    vmem_bytes=128 * 2 ** 20,
+    hbm_bytes=16 * 2 ** 30,
+)
+
+
+# ---------------------------------------------------------------- Eq. (1)
+def code_balance(alpha: float, n_nzr: float, value_bytes: int = 8,
+                 index_bytes: int = 4) -> float:
+    """Worst-case code balance in bytes/flop (paper Eq. 1, generalised to
+    any value precision).  DP (value_bytes=8):  6 + 4*alpha + 8/N_nzr.
+    SP (value_bytes=4):                          4 + 2*alpha + 4/N_nzr.
+    """
+    # per non-zero: val + col_idx + alpha*RHS element + LHS (read+write) / row,
+    # over 2 flops.  DP: (8 + 4 + 8a + 16/N)/2 = 6 + 4a + 8/N  (paper Eq. 1)
+    # SP: (4 + 4 + 4a +  8/N)/2 = 4 + 2a + 4/N
+    return (
+        value_bytes + index_bytes + value_bytes * alpha
+        + 2 * value_bytes / n_nzr
+    ) / 2.0
+
+
+def alpha_range(n_nzr: float) -> tuple[float, float]:
+    """Admissible RHS reuse parameter: [1/N_nzr (perfect reuse), 1 (none)]."""
+    return (1.0 / n_nzr, 1.0)
+
+
+# ------------------------------------------------------------- Eq. (2)-(4)
+def t_mvm(n_rows: float, n_nzr: float, alpha: float, dev_bw: float,
+          value_bytes: int = 8) -> float:
+    """Paper Eq. (2) left: wallclock of the on-device spMVM.
+    T = (value_bytes*N / B_dev) * [N_nzr*(alpha + 3/2) + 2]  (DP form)."""
+    return (value_bytes * n_rows / dev_bw) * (n_nzr * (alpha + 1.5) + 2.0)
+
+
+def t_link(n_rows: float, link_bw: float, value_bytes: int = 8) -> float:
+    """Paper Eq. (2) right: moving RHS in and LHS out over the slow link."""
+    return 2 * value_bytes * n_rows / link_bw
+
+
+def n_nzr_upper_for_link_penalty(dev_bw: float, link_bw: float,
+                                 alpha: float) -> float:
+    """Paper Eq. (3): below this N_nzr the link transfer costs >= 50% extra
+    (T_MVM <= T_link) -> accelerator not worthwhile."""
+    return 2.0 * (dev_bw / link_bw - 1.0) / (alpha + 1.5)
+
+
+def n_nzr_lower_for_link_penalty(dev_bw: float, link_bw: float,
+                                 alpha: float) -> float:
+    """Paper Eq. (4): above this N_nzr the link penalty is < 10%
+    (T_MVM >= 10*T_link)."""
+    return (20.0 * dev_bw / link_bw - 2.0) / (alpha + 1.5)
+
+
+# -------------------------------------------------------------- roofline
+def spmvm_flops(nnz: int) -> int:
+    """2 flops (multiply + add) per stored non-zero."""
+    return 2 * nnz
+
+
+def spmvm_bytes(stored_elements: int, n_rows: int, alpha: float,
+                n_nzr: float, value_bytes: int = 8,
+                index_bytes: int = 4) -> float:
+    """Minimum HBM traffic of one spMVM in a given format: matrix values +
+    indices stream once; RHS traffic scales with alpha; LHS written once."""
+    return (
+        stored_elements * (value_bytes + index_bytes)
+        + alpha * n_nzr * n_rows * value_bytes
+        + 2 * n_rows * value_bytes
+    )
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def fraction_of_roofline(self, achieved_s: float) -> float:
+        """How close a measured/estimated step time is to the roofline bound."""
+        return self.bound_s / achieved_s if achieved_s > 0 else 0.0
+
+
+def roofline_terms(hlo_flops: float, hlo_bytes: float,
+                   collective_bytes: float, chips: int,
+                   spec: TPUSpec = TPU_V5E,
+                   flops_rate: float | None = None) -> RooflineReport:
+    """EXPERIMENTS.md §Roofline three-term model.
+
+    compute    = HLO_FLOPs / (chips * peak)
+    memory     = HLO_bytes / (chips * HBM_bw)
+    collective = collective_bytes / (chips * link_bw)
+
+    ``hlo_flops``/``hlo_bytes`` are GLOBAL (whole-program) numbers from
+    ``compiled.cost_analysis()``; collective_bytes parsed from the HLO.
+    """
+    rate = flops_rate if flops_rate is not None else spec.peak_flops
+    return RooflineReport(
+        compute_s=hlo_flops / (chips * rate),
+        memory_s=hlo_bytes / (chips * spec.hbm_bw),
+        collective_s=collective_bytes / (chips * spec.ici_bw),
+        chips=chips,
+    )

@@ -1,0 +1,90 @@
+"""Bandwidth-reducing reordering (beyond-paper optimization).
+
+The paper observes (§2.2/§3) that matrices whose nonzeros scatter across
+the full column space are "invalidated" for multi-accelerator spMVM: the
+halo degenerates toward an all-gather.  A symmetric Reverse Cuthill-McKee
+(RCM) permutation concentrates nonzeros near the diagonal, shrinking the
+partitioner's measured halo width — the collective term of the
+distributed roofline drops in direct proportion (EXPERIMENTS.md §Perf,
+sparse-core iteration).
+
+Pure numpy BFS implementation (no scipy).  The permutation composes with
+pJDS's *local* row sort (dist_spmv sorts within each device slice), so
+RCM fixes inter-device locality while pJDS fixes intra-device padding —
+the two operate at different levels of the hierarchy.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .formats import CSRMatrix, csr_from_coo
+
+__all__ = ["rcm_permutation", "permute_symmetric"]
+
+
+def rcm_permutation(m: CSRMatrix) -> np.ndarray:
+    """Reverse Cuthill-McKee ordering of the symmetrised adjacency.
+    Returns perm with new_index = position of old row in perm."""
+    n = m.n_rows
+    # symmetrised adjacency in CSR form (A + A^T pattern)
+    rl = np.diff(m.indptr)
+    rows = np.repeat(np.arange(n, dtype=np.int64), rl)
+    cols = m.indices.astype(np.int64)
+    ar = np.concatenate([rows, cols])
+    ac = np.concatenate([cols, rows])
+    order = np.lexsort((ac, ar))
+    ar, ac = ar[order], ac[order]
+    keep = np.ones(len(ar), bool)
+    keep[1:] = (ar[1:] != ar[:-1]) | (ac[1:] != ac[:-1])
+    ar, ac = ar[keep], ac[keep]
+    indptr = np.zeros(n + 1, np.int64)
+    np.add.at(indptr, ar + 1, 1)
+    np.cumsum(indptr, out=indptr)
+
+    degree = np.diff(indptr)
+    visited = np.zeros(n, bool)
+    result = np.empty(n, np.int64)
+    pos = 0
+    # BFS from minimum-degree node of each component
+    remaining = np.argsort(degree, kind="stable")
+    rem_i = 0
+    while pos < n:
+        while rem_i < n and visited[remaining[rem_i]]:
+            rem_i += 1
+        start = remaining[rem_i]
+        visited[start] = True
+        result[pos] = start
+        head = pos
+        pos += 1
+        while head < pos:
+            u = result[head]
+            head += 1
+            nbrs = ac[indptr[u]:indptr[u + 1]]
+            nbrs = nbrs[~visited[nbrs]]
+            if len(nbrs):
+                nbrs = nbrs[np.argsort(degree[nbrs], kind="stable")]
+                visited[nbrs] = True
+                result[pos:pos + len(nbrs)] = nbrs
+                pos += len(nbrs)
+    return result[::-1].copy()          # the "reverse" in RCM
+
+
+def permute_symmetric(m: CSRMatrix, perm: np.ndarray) -> CSRMatrix:
+    """B = P A P^T with perm[k] = old index placed at new position k."""
+    n = m.n_rows
+    inv = np.empty(n, np.int64)
+    inv[perm] = np.arange(n)
+    rl = np.diff(m.indptr)
+    rows = np.repeat(np.arange(n, dtype=np.int64), rl)
+    new_rows = inv[rows]
+    new_cols = inv[m.indices.astype(np.int64)]
+    return csr_from_coo(new_rows, new_cols, m.data.copy(), m.shape,
+                        sum_duplicates=False)
+
+
+def bandwidth(m: CSRMatrix) -> int:
+    rl = np.diff(m.indptr)
+    rows = np.repeat(np.arange(m.n_rows, dtype=np.int64), rl)
+    if len(rows) == 0:
+        return 0
+    return int(np.abs(rows - m.indices.astype(np.int64)).max())

@@ -1,0 +1,139 @@
+"""jit'd public wrappers around the Pallas kernels + device containers.
+
+``to_device_pjds`` / ``to_device_ell`` move a host-side format
+(``repro.core.formats``) onto the device with the kernel-side metadata
+(chunk maps, tile chunk counts) precomputed.  ``pjds_matvec`` /
+``ell_matvec`` / ``pjds_matmat`` dispatch to either the Pallas kernel
+(``backend='kernel'``, interpret-mode on CPU) or the pure-jnp oracle
+(``backend='ref'``, fast on CPU and used inside the distributed layer).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats as F
+from . import ref as R
+from .pjds_spmv import pjds_matvec_kernel_call
+from .pjds_spmm import pjds_matmat_kernel_call
+from .ellr_spmv import ell_matvec_kernel_call
+
+__all__ = [
+    "PJDSDevice",
+    "ELLDevice",
+    "to_device_pjds",
+    "to_device_ell",
+    "pjds_matvec",
+    "pjds_matmat",
+    "ell_matvec",
+]
+
+Backend = Literal["kernel", "ref"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PJDSDevice:
+    """Device-resident pJDS operand.  Registered as a pytree so it can be
+    closed over / passed through jit and shard_map."""
+
+    val: jax.Array                     # (total_jds, b_r)
+    col_idx: jax.Array                 # (total_jds, b_r) int32
+    chunk_map: jax.Array               # (total_jds // chunk_l,) int32
+    row_block: jax.Array               # (total_jds,) int32 (for the ref)
+    n_blocks: int = dataclasses.field(metadata=dict(static=True))
+    b_r: int = dataclasses.field(metadata=dict(static=True))
+    chunk_l: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_rows_pad(self) -> int:
+        return self.n_blocks * self.b_r
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ELLDevice:
+    val: jax.Array                     # (max_nzr, n_pad)
+    col_idx: jax.Array                 # (max_nzr, n_pad) int32
+    rowlen: jax.Array                  # (n_pad,) int32
+    tile_chunks: jax.Array             # (n_pad // tile_r,) int32
+    chunk_l: int = dataclasses.field(metadata=dict(static=True))
+    tile_r: int = dataclasses.field(metadata=dict(static=True))
+
+
+def to_device_pjds(p: F.PJDSMatrix, chunk_l: int = 8,
+                   dtype=None) -> PJDSDevice:
+    if np.any(p.block_len % chunk_l):
+        raise ValueError(
+            f"chunk_l={chunk_l} must divide every block length; rebuild the "
+            f"pJDS matrix with diag_align a multiple of chunk_l"
+        )
+    # block id per jagged-diagonal row, then per chunk
+    row_block = np.repeat(
+        np.arange(p.n_blocks, dtype=np.int32), p.block_len
+    )
+    chunk_map = row_block[::chunk_l].copy()
+    val = p.val if dtype is None else p.val.astype(dtype)
+    return PJDSDevice(
+        val=jnp.asarray(val),
+        col_idx=jnp.asarray(p.col_idx),
+        chunk_map=jnp.asarray(chunk_map),
+        row_block=jnp.asarray(row_block),
+        n_blocks=p.n_blocks,
+        b_r=p.b_r,
+        chunk_l=chunk_l,
+    )
+
+
+def to_device_ell(e: F.ELLMatrix, chunk_l: int = 8, tile_r: int = 128,
+                  dtype=None) -> ELLDevice:
+    if e.val.shape[0] % chunk_l or e.n_rows_pad % tile_r:
+        raise ValueError("ELL shapes not aligned to (chunk_l, tile_r); "
+                         "rebuild with matching row_align/diag_align")
+    tile_max = e.rowlen.reshape(-1, tile_r).max(axis=1)
+    tile_chunks = ((tile_max + chunk_l - 1) // chunk_l).astype(np.int32)
+    val = e.val if dtype is None else e.val.astype(dtype)
+    return ELLDevice(
+        val=jnp.asarray(val),
+        col_idx=jnp.asarray(e.col_idx),
+        rowlen=jnp.asarray(e.rowlen),
+        tile_chunks=jnp.asarray(tile_chunks),
+        chunk_l=chunk_l,
+        tile_r=tile_r,
+    )
+
+
+def pjds_matvec(a: PJDSDevice, x: jax.Array,
+                backend: Backend = "ref") -> jax.Array:
+    """y = A x in the permuted basis; y has n_rows_pad entries."""
+    if backend == "kernel":
+        return pjds_matvec_kernel_call(
+            a.val, a.col_idx, a.chunk_map, x,
+            n_blocks=a.n_blocks, chunk_l=a.chunk_l,
+        )
+    return R.pjds_matvec_ref(a.val, a.col_idx, a.row_block, x, a.n_blocks)
+
+
+def pjds_matmat(a: PJDSDevice, x: jax.Array, backend: Backend = "ref",
+                rhs_t: int = 128) -> jax.Array:
+    """Y = A X; X: (n_cols_pad, n_rhs)."""
+    if backend == "kernel":
+        return pjds_matmat_kernel_call(
+            a.val, a.col_idx, a.chunk_map, x,
+            n_blocks=a.n_blocks, chunk_l=a.chunk_l, rhs_t=rhs_t,
+        )
+    return R.pjds_matmat_ref(a.val, a.col_idx, a.row_block, x, a.n_blocks)
+
+
+def ell_matvec(a: ELLDevice, x: jax.Array,
+               backend: Backend = "ref") -> jax.Array:
+    if backend == "kernel":
+        return ell_matvec_kernel_call(
+            a.val, a.col_idx, a.tile_chunks, x,
+            chunk_l=a.chunk_l, tile_r=a.tile_r,
+        )
+    return R.ell_matvec_ref(a.val, a.col_idx, a.rowlen, x)

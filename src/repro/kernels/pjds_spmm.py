@@ -1,0 +1,95 @@
+"""Pallas TPU kernel for pJDS sparse matrix x dense matrix (multi-RHS).
+
+Y = A_pjds @ X with X: (n_cols_pad, n_rhs).  This is the kernel behind
+``repro.sparse.SparseFFN`` (pJDS-stored pruned FFN weights applied to a
+batch of activations) — the paper's format promoted to a first-class LM
+feature (DESIGN.md §4).
+
+Grid: (rhs tiles, jagged chunks) with chunks innermost so the X tile
+stays resident across a full sweep of the matrix.  Per step the kernel
+gathers (chunk_l, b_r) rows of the X tile — amortising each gathered RHS
+row over ``rhs_t`` lanes, which lifts the arithmetic intensity from the
+spMVM's ~2/12 flop/byte to ~2*rhs_t/12: multi-RHS is how a sparse format
+escapes the memory roofline on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["pjds_matmat_kernel_call"]
+
+
+def _acc_dtype(*dts):
+    r = jnp.result_type(*dts)
+    if r in (jnp.bfloat16, jnp.float16):
+        return jnp.float32
+    return r
+
+
+def _pjds_spmm_kernel(chunk_map_ref, val_ref, col_ref, x_ref, y_ref):
+    g = pl.program_id(1)
+    blk = chunk_map_ref[g]
+
+    @pl.when(g == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    x = x_ref[...]                              # (n_cols_pad, rhs_t)
+    idx = col_ref[...]                          # (chunk_l, b_r)
+    gathered = x[idx]                           # (chunk_l, b_r, rhs_t)
+    dt = y_ref.dtype
+    contrib = val_ref[...].astype(dt)[..., None] * gathered.astype(dt)
+    acc = jnp.sum(contrib, axis=0)              # (b_r, rhs_t)
+    b_r = acc.shape[0]
+    y_ref[pl.dslice(blk * b_r, b_r), :] += acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_blocks", "chunk_l", "rhs_t", "interpret"),
+)
+def pjds_matmat_kernel_call(
+    val: jax.Array,
+    col_idx: jax.Array,
+    chunk_map: jax.Array,
+    x: jax.Array,
+    *,
+    n_blocks: int,
+    chunk_l: int = 8,
+    rhs_t: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Y = A_pjds @ X (permuted basis).
+
+    val/col_idx: (total_jds, b_r); chunk_map: (total_jds//chunk_l,) int32;
+    x: (n_cols_pad, n_rhs) with n_rhs % rhs_t == 0.
+    Returns (n_blocks * b_r, n_rhs) in the accumulator dtype.
+    """
+    total_jds, b_r = val.shape
+    n_cols_pad, n_rhs = x.shape
+    if total_jds % chunk_l or n_rhs % rhs_t:
+        raise ValueError("shapes not aligned to (chunk_l, rhs_t)")
+    n_chunks = total_jds // chunk_l
+    n_tiles = n_rhs // rhs_t
+    dt = _acc_dtype(val.dtype, x.dtype)
+
+    y = pl.pallas_call(
+        _pjds_spmm_kernel,
+        grid=(n_tiles, n_chunks),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                        # chunk_map
+            pl.BlockSpec((chunk_l, b_r), lambda t, g: (g, 0)),            # val
+            pl.BlockSpec((chunk_l, b_r), lambda t, g: (g, 0)),            # col
+            pl.BlockSpec((n_cols_pad, rhs_t), lambda t, g: (0, t)),       # X tile
+        ],
+        out_specs=pl.BlockSpec((n_blocks * b_r, rhs_t), lambda t, g: (0, t)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks * b_r, n_rhs), dt),
+        interpret=interpret,
+        name="pjds_spmm",
+    )(chunk_map, val, col_idx, x)
+    return y

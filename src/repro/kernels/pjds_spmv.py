@@ -1,0 +1,110 @@
+"""Pallas TPU kernel for pJDS sparse matrix-vector multiplication.
+
+This is the TPU adaptation of paper Listing 2.  Refer to DESIGN.md §2 for
+the layout rationale; in short:
+
+* ``val``/``col_idx`` are ``(total_jds, b_r)`` with rows on LANES
+  (b_r = 128 by default) and jagged diagonals on SUBLANES — the paper's
+  column-major ELLPACK layout restricted to each sorted row block.
+* The grid walks jagged-diagonal *chunks* of ``chunk_l`` sublanes
+  (a multiple of 8), so each grid step streams one (chunk_l, b_r) VMEM
+  tile of values + indices: the TPU analogue of one coalesced warp load.
+* ``chunk_map`` (SMEM) says which pJDS row block a chunk belongs to —
+  this is the kernel-side form of the paper's ``col_start[]`` array.
+  Because blocks are stored contiguously, walking chunks sequentially
+  needs NO gather on the matrix data; only the RHS is gathered.
+* The RHS ``x`` is resident in VMEM for the whole kernel.  Single-device
+  callers must respect the VMEM budget; the distributed layer
+  (``core.dist_spmv``) makes this structural by handing each device only
+  its local column slice (DESIGN.md: enforced alpha -> 1/N_nzr).
+
+VMEM working set per step: 2 tiles * chunk_l * b_r * itemsize
+(+ x + y resident).  With chunk_l=64, b_r=128, f32: 64 KiB of tiles.
+
+Accumulation is in f32 for sub-f32 inputs; output dtype is the
+accumulator dtype (callers cast down if desired).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["pjds_matvec_kernel_call"]
+
+
+def _acc_dtype(*dts):
+    r = jnp.result_type(*dts)
+    if r in (jnp.bfloat16, jnp.float16):
+        return jnp.float32
+    return r
+
+
+def _pjds_spmv_kernel(chunk_map_ref, val_ref, col_ref, x_ref, y_ref):
+    g = pl.program_id(0)
+    blk = chunk_map_ref[g]
+
+    # Zero the (fully VMEM-resident) output once, before any accumulation.
+    @pl.when(g == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    x = x_ref[...]
+    idx = col_ref[...]                       # (chunk_l, b_r)
+    gathered = x[idx]                        # VPU dynamic-gather from VMEM
+    dt = y_ref.dtype
+    contrib = val_ref[...].astype(dt) * gathered.astype(dt)
+    y_ref[blk, :] += jnp.sum(contrib, axis=0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_blocks", "chunk_l", "interpret"),
+)
+def pjds_matvec_kernel_call(
+    val: jax.Array,
+    col_idx: jax.Array,
+    chunk_map: jax.Array,
+    x: jax.Array,
+    *,
+    n_blocks: int,
+    chunk_l: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """y = A_pjds @ x (permuted basis).
+
+    ``chunk_l`` must divide every pJDS block length (guaranteed when the
+    format was built with ``diag_align`` a multiple of ``chunk_l``); the
+    ``ops.to_device_pjds`` wrapper checks this.  Larger ``chunk_l`` means
+    fewer grid steps at the cost of more padding — a measured trade-off in
+    benchmarks/bench_kernels.py.
+
+    val/col_idx: (total_jds, b_r) with total_jds % chunk_l == 0.
+    chunk_map:   (total_jds // chunk_l,) int32 row-block id per chunk.
+    x:           (n_cols_pad,) RHS in the permuted basis.
+    Returns y:   (n_blocks * b_r,) in the accumulator dtype.
+    """
+    total_jds, b_r = val.shape
+    if total_jds % chunk_l:
+        raise ValueError(f"total_jds={total_jds} not a multiple of chunk_l={chunk_l}")
+    n_chunks = total_jds // chunk_l
+    dt = _acc_dtype(val.dtype, x.dtype)
+
+    y_blk = pl.pallas_call(
+        _pjds_spmv_kernel,
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                # chunk_map
+            pl.BlockSpec((chunk_l, b_r), lambda g: (g, 0)),       # val tile
+            pl.BlockSpec((chunk_l, b_r), lambda g: (g, 0)),       # col tile
+            pl.BlockSpec(x.shape, lambda g: (0,)),                # x resident
+        ],
+        out_specs=pl.BlockSpec((n_blocks, b_r), lambda g: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, b_r), dt),
+        interpret=interpret,
+        name="pjds_spmv",
+    )(chunk_map, val, col_idx, x)
+    return y_blk.reshape(n_blocks * b_r)

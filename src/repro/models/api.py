@@ -1,0 +1,238 @@
+"""Public model API: ``build_model(cfg)`` -> :class:`Model`.
+
+One class serves all 10 assigned architectures:
+
+* decoder-only LMs (dense / MoE / SSM / hybrid) — ``loss`` / ``prefill``
+  / ``decode_step``;
+* VLM (llava): precomputed patch embeddings (stub frontend) are prepended
+  to the text embeddings;
+* enc-dec (seamless): precomputed frame embeddings (stub frontend) feed a
+  bidirectional encoder; the decoder cross-attends.
+
+``input_specs(shape_name)`` returns ShapeDtypeStruct stand-ins + logical
+PartitionSpecs for every input of the step function the shape exercises —
+the dry-run contract (task spec, MULTI-POD DRY-RUN item 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig, SHAPES, ShapeConfig
+from . import common as C
+from . import transformer as T
+from .sharding import shard
+
+__all__ = ["Model", "build_model"]
+
+
+def _round_up(x, m):
+    return (x + m - 1) // m * m
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.dtype = C.dtype_of(cfg.param_dtype)
+        self.adt = C.dtype_of(cfg.activation_dtype)
+        self.plan = T.make_plan(cfg, cfg.n_layers)
+        self.enc_plan = (T.make_plan(cfg, cfg.enc_layers,
+                                     force_dense_pattern=True, moe_ok=False)
+                         if cfg.is_encdec else None)
+
+    # ------------------------------------------------------------- params
+    def init(self, key) -> dict:
+        return self._init(key)[0]
+
+    def param_specs(self) -> dict:
+        """Spec tree mirroring the param tree (tuples of logical axes).
+        Built under eval_shape so no arrays are materialised."""
+        box = {}
+
+        def f():
+            p, s = self._init(jax.random.PRNGKey(0))
+            box["s"] = s
+            return p
+
+        jax.eval_shape(f)
+        return box["s"]
+
+    def param_shapes(self) -> dict:
+        return jax.eval_shape(lambda: self._init(jax.random.PRNGKey(0))[0])
+
+    def _init(self, key) -> C.Init:
+        cfg = self.cfg
+        ks = C.split_keys(key, 5)
+        p, s = {}, {}
+        p["embed"], s["embed"] = C.embed_init(ks[0], cfg.vocab, cfg.d_model,
+                                              self.dtype)
+        if not cfg.tie_embeddings:
+            p["unembed"], s["unembed"] = C.embed_init(
+                ks[1], cfg.vocab, cfg.d_model, self.dtype)
+        p["final_ln"], s["final_ln"] = C.rmsnorm_init(cfg.d_model, self.dtype)
+        p["dec"], s["dec"] = T.stack_init(ks[2], cfg, self.plan,
+                                          cross=cfg.is_encdec,
+                                          dtype=self.dtype)
+        if cfg.is_encdec:
+            p["enc"], s["enc"] = T.stack_init(ks[3], cfg, self.enc_plan,
+                                              cross=False, dtype=self.dtype)
+            p["enc_ln"], s["enc_ln"] = C.rmsnorm_init(cfg.d_model, self.dtype)
+        return p, s
+
+    def _unembed_w(self, params):
+        return params["embed"]["w"] if self.cfg.tie_embeddings \
+            else params["unembed"]["w"]
+
+    # --------------------------------------------------------------- train
+    def loss(self, params, batch, *, remat: bool = True,
+             q_chunk: int = 512, k_chunk: int = 512,
+             loss_chunk: int = 512, aux_weight: float = 1e-2):
+        """batch: tokens (B,S) int32, labels (B,S) int32 (-1 masked),
+        optional frontend (B,F,D) / enc_frames (B,Se,D)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = params["embed"]["w"].astype(self.adt)[tokens]
+        x = shard(x, "batch", None, None)
+        memory = None
+        if cfg.is_encdec:
+            m = batch["enc_frames"].astype(self.adt)
+            m = shard(m, "batch", None, None)
+            mpos = jnp.arange(m.shape[1])[None, :]
+            m, _ = T.stack_apply_train(params["enc"], cfg, self.enc_plan, m,
+                                       mpos, causal=False, remat=remat,
+                                       q_chunk=q_chunk, k_chunk=k_chunk)
+            memory = C.rmsnorm(params["enc_ln"], m, cfg.norm_eps)
+        n_front = 0
+        if cfg.frontend == "vision":
+            fe = batch["frontend"].astype(self.adt)
+            x = jnp.concatenate([shard(fe, "batch", None, None), x], axis=1)
+            n_front = fe.shape[1]
+        positions = jnp.arange(x.shape[1])[None, :]
+        x, aux = T.stack_apply_train(params["dec"], cfg, self.plan, x,
+                                     positions, memory=memory, remat=remat,
+                                     q_chunk=q_chunk, k_chunk=k_chunk)
+        x = C.rmsnorm(params["final_ln"], x, cfg.norm_eps)
+        scored = x[:, n_front:]
+        nll = T.chunked_xent(scored, self._unembed_w(params),
+                             batch["labels"], chunk=loss_chunk,
+                             vocab=cfg.vocab)
+        return nll + aux_weight * aux, {"nll": nll, "aux": aux}
+
+    # ------------------------------------------------------------- serving
+    def prefill(self, params, batch, *, max_len: int,
+                q_chunk: int = 512, k_chunk: int = 512):
+        """Process the full prompt; returns (cache, last-position logits)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = params["embed"]["w"].astype(self.adt)[tokens]
+        x = shard(x, "batch", None, None)
+        memory = None
+        if cfg.is_encdec:
+            m = batch["enc_frames"].astype(self.adt)
+            mpos = jnp.arange(m.shape[1])[None, :]
+            m, _ = T.stack_apply_train(params["enc"], cfg, self.enc_plan, m,
+                                       mpos, causal=False, remat=False,
+                                       q_chunk=q_chunk, k_chunk=k_chunk)
+            memory = C.rmsnorm(params["enc_ln"], m, cfg.norm_eps)
+        if cfg.frontend == "vision":
+            fe = batch["frontend"].astype(self.adt)
+            x = jnp.concatenate([shard(fe, "batch", None, None), x], axis=1)
+        positions = jnp.arange(x.shape[1])[None, :]
+        x, cache = T.stack_apply_prefill(params["dec"], cfg, self.plan, x,
+                                         positions, max_len=max_len,
+                                         memory=memory, cache_dtype=self.adt,
+                                         q_chunk=q_chunk, k_chunk=k_chunk)
+        x = C.rmsnorm(params["final_ln"], x[:, -1:], cfg.norm_eps)
+        logits = self._logits(params, x)
+        return cache, logits
+
+    def _logits(self, params, x):
+        w = self._unembed_w(params)
+        logits = jnp.einsum("btd,vd->btv", x.astype(jnp.float32),
+                            w.astype(jnp.float32))
+        if w.shape[0] > self.cfg.vocab:   # mask the padded vocab tail
+            logits = jnp.where(jnp.arange(w.shape[0]) >= self.cfg.vocab,
+                               -1e30, logits)
+        return logits
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens: (B, 1) int32; pos: (B,) absolute positions."""
+        cfg = self.cfg
+        x = params["embed"]["w"].astype(self.adt)[tokens]
+        x, new_cache = T.stack_apply_decode(params["dec"], cfg, self.plan,
+                                            x, cache, pos)
+        x = C.rmsnorm(params["final_ln"], x, cfg.norm_eps)
+        return new_cache, self._logits(params, x)
+
+    def init_cache(self, batch: int, max_len: int):
+        return T.stack_cache_init(self.cfg, self.plan, batch, max_len,
+                                  cross=self.cfg.is_encdec, dtype=self.adt)
+
+    def cache_specs(self):
+        return T.stack_cache_specs(self.cfg, self.plan,
+                                   cross=self.cfg.is_encdec)
+
+    # -------------------------------------------------------- dry-run specs
+    def input_specs(self, shape: ShapeConfig | str, *,
+                    seq_override: Optional[int] = None,
+                    batch_override: Optional[int] = None):
+        """ShapeDtypeStruct stand-ins + logical specs for the step function
+        this shape exercises.  kind 'train'   -> loss(params, batch)
+                               'prefill' -> prefill(params, batch)
+                               'decode'  -> decode_step(params, cache, t, pos)
+        """
+        cfg = self.cfg
+        if isinstance(shape, str):
+            shape = SHAPES[shape]
+        s = seq_override or shape.seq_len
+        b = batch_override or shape.global_batch
+        i32 = jnp.int32
+        if shape.kind == "train":
+            text = s - (cfg.frontend_seq if cfg.frontend == "vision" else 0)
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((b, text), i32),
+                "labels": jax.ShapeDtypeStruct((b, text), i32),
+            }
+            specs = {"tokens": ("batch", None), "labels": ("batch", None)}
+            if cfg.frontend == "vision":
+                batch["frontend"] = jax.ShapeDtypeStruct(
+                    (b, cfg.frontend_seq, cfg.d_model), self.adt)
+                specs["frontend"] = ("batch", None, None)
+            if cfg.is_encdec:
+                batch["enc_frames"] = jax.ShapeDtypeStruct(
+                    (b, s, cfg.d_model), self.adt)
+                specs["enc_frames"] = ("batch", None, None)
+            return batch, specs
+        if shape.kind == "prefill":
+            text = s - (cfg.frontend_seq if cfg.frontend == "vision" else 0)
+            batch = {"tokens": jax.ShapeDtypeStruct((b, text), i32)}
+            specs = {"tokens": ("batch", None)}
+            if cfg.frontend == "vision":
+                batch["frontend"] = jax.ShapeDtypeStruct(
+                    (b, cfg.frontend_seq, cfg.d_model), self.adt)
+                specs["frontend"] = ("batch", None, None)
+            if cfg.is_encdec:
+                batch["enc_frames"] = jax.ShapeDtypeStruct(
+                    (b, s, cfg.d_model), self.adt)
+                specs["enc_frames"] = ("batch", None, None)
+            return batch, specs
+        # decode: cache of length s plus one new token
+        cache = jax.eval_shape(lambda: self.init_cache(b, s))
+        cache_specs = self.cache_specs()
+        batch = {
+            "cache": cache,
+            "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "pos": jax.ShapeDtypeStruct((b,), i32),
+        }
+        specs = {"cache": cache_specs, "tokens": ("batch", None),
+                 "pos": ("batch",)}
+        return batch, specs
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,387 @@
+"""GQA attention: flash-style chunked softmax for train/prefill, cached
+decode, sliding-window (local) variants, RoPE, qk-norm, QKV bias.
+
+Train/prefill path ("pair-scan flash"): the (q-chunk, kv-chunk) grid is
+enumerated host-side and only the pairs that can interact (causal
+triangle, intersected with the sliding window band) are visited by one
+``lax.scan`` over a static pair list.  This keeps
+
+* memory at O(chunk^2) per step (true flash semantics, online softmax),
+* FLOPs at the exact block-triangle/band count — no 2x masked waste, so
+  ``cost_analysis`` FLOPs in the dry-run reflect useful work, and
+* the HLO size O(1) in sequence length (single scan body) — which also
+  keeps the 40-cell dry-run compile times tractable.
+
+This mirrors how the paper's pJDS kernel skips padded work at block
+granularity rather than per element (Fig. 2c): the mask only trims the
+block edges, block interiors are dense compute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common as C
+from .sharding import shard
+from .unroll import scan_unroll
+
+# ---------------------------------------------------------------------
+# Attention implementation switch (see EXPERIMENTS.md §Perf):
+#   "pairs" — one scan over the static (q-chunk, kv-chunk) pair list.
+#             O(1) HLO in sequence length; the carry holds the full
+#             output accumulator, so each step dynamic-update-slices a
+#             (B, nq, cq, H, D) buffer: in-place on TPU, but inflates
+#             HloCostAnalysis bytes and serialises updates.
+#   "qloop" — static Python loop over q chunks; each q chunk runs an
+#             inner scan over exactly its causal/window kv range with a
+#             chunk-local carry.  No large DUS; per-q-chunk outputs are
+#             concatenated.  HLO grows O(nq) but every buffer is small —
+#             the TPU-friendly schedule (independent q-chunk streams).
+# ---------------------------------------------------------------------
+import contextlib
+
+_ATTN_IMPL = "pairs"
+
+
+def get_attn_impl() -> str:
+    return _ATTN_IMPL
+
+
+@contextlib.contextmanager
+def use_attn_impl(name: str):
+    global _ATTN_IMPL
+    assert name in ("pairs", "qloop")
+    prev = _ATTN_IMPL
+    _ATTN_IMPL = name
+    try:
+        yield
+    finally:
+        _ATTN_IMPL = prev
+
+
+def block_pairs(n_q: int, n_k: int, q_chunk: int, k_chunk: int,
+                causal: bool, window: Optional[int],
+                kv_offset: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Static list of interacting (q_chunk_idx, kv_chunk_idx) pairs.
+    ``kv_offset`` shifts q positions relative to kv positions (q token i
+    sits at absolute position kv_offset + i), for chunked prefill."""
+    qi_l, ki_l = [], []
+    for i in range(n_q):
+        q_lo = kv_offset + i * q_chunk
+        q_hi = kv_offset + (i + 1) * q_chunk - 1
+        for j in range(n_k):
+            k_lo = j * k_chunk
+            k_hi = (j + 1) * k_chunk - 1
+            if causal and k_lo > q_hi:
+                continue
+            if window is not None and k_hi < q_lo - window + 1:
+                continue
+            qi_l.append(i)
+            ki_l.append(j)
+    return (np.asarray(qi_l, np.int32), np.asarray(ki_l, np.int32))
+
+
+def flash_attention(
+    q: jax.Array,            # (B, Sq, Hq, D)
+    k: jax.Array,            # (B, Sk, Hkv, D)
+    v: jax.Array,            # (B, Sk, Hkv, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 512,
+    k_chunk: int = 512,
+    kv_offset: int = 0,
+    logit_softcap: float = 0.0,
+) -> jax.Array:
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    # largest divisors <= requested, so arbitrary (frontend-extended)
+    # sequence lengths work
+    q_chunk = next(c for c in range(min(q_chunk, sq), 0, -1) if sq % c == 0)
+    k_chunk = next(c for c in range(min(k_chunk, sk), 0, -1) if sk % c == 0)
+    nq, nk = sq // q_chunk, sk // k_chunk
+    scale = 1.0 / np.sqrt(d)
+
+    qs = q.reshape(b, nq, q_chunk, hkv, g, d)
+    ks = k.reshape(b, nk, k_chunk, hkv, d)
+    vs = v.reshape(b, nk, k_chunk, hkv, d)
+
+    if _ATTN_IMPL == "qloop":
+        return _flash_qloop(qs, ks, vs, b, sq, hq, hkv, g, d, nq, nk,
+                            q_chunk, k_chunk, causal, window, kv_offset,
+                            scale, logit_softcap, q.dtype)
+
+    pairs_q, pairs_k = block_pairs(nq, nk, q_chunk, k_chunk, causal, window,
+                                   kv_offset)
+
+    acc = jnp.zeros((b, nq, q_chunk, hkv, g, d), jnp.float32)
+    m = jnp.full((b, nq, q_chunk, hkv, g), -jnp.inf, jnp.float32)
+    l = jnp.zeros((b, nq, q_chunk, hkv, g), jnp.float32)
+
+    q_arange = jnp.arange(q_chunk)
+    k_arange = jnp.arange(k_chunk)
+
+    def step(carry, pair):
+        acc, m, l = carry
+        qi, ki = pair
+        qc = jax.lax.dynamic_index_in_dim(qs, qi, 1, keepdims=False)
+        kc = jax.lax.dynamic_index_in_dim(ks, ki, 1, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vs, ki, 1, keepdims=False)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qc.astype(jnp.float32),
+                       kc.astype(jnp.float32)) * scale
+        if logit_softcap:
+            s = logit_softcap * jnp.tanh(s / logit_softcap)
+        qpos = kv_offset + qi * q_chunk + q_arange          # (cq,)
+        kpos = ki * k_chunk + k_arange                      # (ck,)
+        ok = jnp.ones((q_chunk, k_chunk), bool)
+        if causal:
+            ok &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            ok &= qpos[:, None] - kpos[None, :] < window
+        s = jnp.where(ok[None, :, None, None, :], s, -jnp.inf)
+
+        m_old = jax.lax.dynamic_index_in_dim(m, qi, 1, keepdims=False)
+        l_old = jax.lax.dynamic_index_in_dim(l, qi, 1, keepdims=False)
+        a_old = jax.lax.dynamic_index_in_dim(acc, qi, 1, keepdims=False)
+        m_new = jnp.maximum(m_old, s.max(axis=-1))
+        # rows with no valid kv yet keep m = -inf; make exp well-defined
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(ok[None, :, None, None, :], p, 0.0)
+        corr = jnp.where(jnp.isneginf(m_old), 0.0,
+                         jnp.exp(m_old - m_safe))
+        l_new = l_old * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bqhgk,bkhd->bqhgd", p, vc.astype(jnp.float32))
+        a_new = a_old * corr[..., None] + pv
+        return (
+            jax.lax.dynamic_update_index_in_dim(acc, a_new, qi, 1),
+            jax.lax.dynamic_update_index_in_dim(m, m_new, qi, 1),
+            jax.lax.dynamic_update_index_in_dim(l, l_new, qi, 1),
+        ), None
+
+    (acc, m, l), _ = jax.lax.scan(
+        step, (acc, m, l), (jnp.asarray(pairs_q), jnp.asarray(pairs_k)),
+        unroll=scan_unroll(),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def _flash_qloop(qs, ks, vs, b, sq, hq, hkv, g, d, nq, nk, q_chunk, k_chunk,
+                 causal, window, kv_offset, scale, logit_softcap, out_dtype):
+    """Per-q-chunk streams with exact static kv ranges (no big DUS)."""
+    k_arange = jnp.arange(k_chunk)
+    q_arange = jnp.arange(q_chunk)
+    outs = []
+    for qi in range(nq):
+        q_lo = kv_offset + qi * q_chunk
+        q_hi = q_lo + q_chunk - 1
+        ki_lo, ki_hi = 0, nk - 1
+        if causal:
+            ki_hi = min(ki_hi, q_hi // k_chunk)
+        if window is not None:
+            ki_lo = max(ki_lo, (q_lo - window + 1) // k_chunk)
+        n_steps = ki_hi - ki_lo + 1
+        qc = qs[:, qi]                                  # (b,cq,hkv,g,d)
+        kseg = ks[:, ki_lo:ki_hi + 1]                   # (b,n,ck,hkv,d)
+        vseg = vs[:, ki_lo:ki_hi + 1]
+        qpos = q_lo + q_arange
+
+        def step(carry, xs):
+            m, l, acc = carry
+            kc, vc, ki = xs
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", qc.astype(jnp.float32),
+                           kc.astype(jnp.float32)) * scale
+            if logit_softcap:
+                s = logit_softcap * jnp.tanh(s / logit_softcap)
+            kpos = ki * k_chunk + k_arange
+            ok = jnp.ones((q_chunk, k_chunk), bool)
+            if causal:
+                ok &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                ok &= qpos[:, None] - kpos[None, :] < window
+            s = jnp.where(ok[None, :, None, None, :], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(ok[None, :, None, None, :], p, 0.0)
+            corr = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - m_safe))
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bqhgk,bkhd->bqhgd", p, vc.astype(jnp.float32))
+            return (m_new, l_new, acc * corr[..., None] + pv), None
+
+        init = (jnp.full((b, q_chunk, hkv, g), -jnp.inf, jnp.float32),
+                jnp.zeros((b, q_chunk, hkv, g), jnp.float32),
+                jnp.zeros((b, q_chunk, hkv, g, d), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            step, init,
+            (jnp.moveaxis(kseg, 1, 0), jnp.moveaxis(vseg, 1, 0),
+             jnp.arange(ki_lo, ki_hi + 1)),
+            unroll=scan_unroll())
+        outs.append(acc / jnp.maximum(l, 1e-30)[..., None])
+    out = jnp.stack(outs, axis=1)                       # (b,nq,cq,hkv,g,d)
+    return out.reshape(b, sq, hq, d).astype(out_dtype)
+
+
+def decode_attention(
+    q: jax.Array,            # (B, 1, Hq, D)
+    k_cache: jax.Array,      # (B, S_cache, Hkv, D)
+    v_cache: jax.Array,
+    kv_positions: jax.Array, # (B, S_cache) int32 absolute pos; -1 = empty
+    pos: jax.Array,          # (B,) current absolute position
+    *,
+    window: Optional[int] = None,
+    logit_softcap: float = 0.0,
+) -> jax.Array:
+    b, _, hq, d = q.shape
+    hkv = k_cache.shape[2]
+    g = hq // hkv
+    scale = 1.0 / np.sqrt(d)
+    qg = q.reshape(b, hkv, g, d)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    if logit_softcap:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    ok = (kv_positions >= 0) & (kv_positions <= pos[:, None])
+    if window is not None:
+        ok &= pos[:, None] - kv_positions < window
+    s = jnp.where(ok[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention block (params + apply)
+# --------------------------------------------------------------------------
+def attn_init(key, cfg, dtype) -> C.Init:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = C.split_keys(key, 4)
+    p, s = {}, {}
+    p["wq"], s["wq"] = C.dense_init(ks[0], d, hq * hd, (None, "model"), dtype,
+                                    bias=cfg.qkv_bias)
+    p["wk"], s["wk"] = C.dense_init(ks[1], d, hkv * hd, (None, "model"), dtype,
+                                    bias=cfg.qkv_bias)
+    p["wv"], s["wv"] = C.dense_init(ks[2], d, hkv * hd, (None, "model"), dtype,
+                                    bias=cfg.qkv_bias)
+    p["wo"], s["wo"] = C.dense_init(ks[3], hq * hd, d, ("model", None), dtype)
+    if cfg.qk_norm:
+        p["qn"], s["qn"] = C.rmsnorm_init(hd, dtype)
+        p["kn"], s["kn"] = C.rmsnorm_init(hd, dtype)
+    return p, s
+
+
+def _project_qkv(p, cfg, x, positions):
+    b, sq, _ = x.shape
+    hd = cfg.resolved_head_dim
+    # Sharding constraints go on the PACKED (h*hd) projections: head
+    # counts like gemma3's 8 need not divide the 16-wide model axis, but
+    # the packed feature dims always do.  GSPMD propagates the split into
+    # the per-head einsums (contracted-dim TP when heads < axis).
+    qp = shard(C.dense_apply(p["wq"], x), "batch", None, "model")
+    kp = shard(C.dense_apply(p["wk"], x), "batch", None, "model")
+    vp = shard(C.dense_apply(p["wv"], x), "batch", None, "model")
+    q = qp.reshape(b, sq, cfg.n_heads, hd)
+    k = kp.reshape(b, sq, cfg.n_kv_heads, hd)
+    v = vp.reshape(b, sq, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = C.rmsnorm(p["qn"], q, cfg.norm_eps)
+        k = C.rmsnorm(p["kn"], k, cfg.norm_eps)
+    q = C.apply_rope(q, positions, cfg.rope_theta)
+    k = C.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply_train(p, cfg, x, positions, *, is_local: bool,
+                     causal: bool = True, q_chunk=512, k_chunk=512):
+    """Full-sequence attention (train / prefill).  Returns (out, (k, v))."""
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    window = cfg.window if is_local else None
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          q_chunk=q_chunk, k_chunk=k_chunk,
+                          logit_softcap=cfg.logit_softcap)
+    b, sq = x.shape[:2]
+    y = C.dense_apply(p["wo"], out.reshape(b, sq, -1))
+    return shard(y, "batch", None, None), (k, v)
+
+
+def attn_apply_decode(p, cfg, x, cache, pos, *, is_local: bool):
+    """Single-token decode step. cache: dict(k, v, pos_arr, ins)."""
+    b = x.shape[0]
+    positions = pos[:, None]
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+    size = cache["k"].shape[1]
+    slot = cache["ins"] % size                  # (B,) ring insertion point
+    bi = jnp.arange(b)
+    k_cache = cache["k"].at[bi, slot].set(k_new[:, 0])
+    v_cache = cache["v"].at[bi, slot].set(v_new[:, 0])
+    pos_arr = cache["pos"].at[bi, slot].set(pos)
+    window = cfg.window if is_local else None
+    out = decode_attention(q, k_cache, v_cache, pos_arr, pos,
+                           window=window, logit_softcap=cfg.logit_softcap)
+    y = C.dense_apply(p["wo"], out.reshape(b, 1, -1))
+    new_cache = {"k": k_cache, "v": v_cache, "pos": pos_arr,
+                 "ins": cache["ins"] + 1}
+    return y, new_cache
+
+
+def attn_cache_init(cfg, batch: int, max_len: int, *, is_local: bool,
+                    dtype=jnp.bfloat16):
+    """KV cache: ring buffer of ``window`` slots for local layers, full
+    ``max_len`` for global layers — the long_500k memory story."""
+    size = min(cfg.window, max_len) if is_local else max_len
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, size, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, size, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.full((batch, size), -1, jnp.int32),
+        "ins": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def attn_cache_specs(cfg, is_local: bool, model_axis: int = 16):
+    """KV-cache sharding: the kv-head dim goes on the model axis when it
+    divides (deepseek/seamless, kv=16); otherwise the head_dim does
+    (every assigned arch has head_dim % 16 == 0).  The sequence dim
+    carries the logical 'kvseq' axis — resolved to the data axis for the
+    long_500k context-parallel decode, None otherwise."""
+    if cfg.n_kv_heads % model_axis == 0:
+        kv = ("batch", "kvseq", "model", None)
+    else:
+        kv = ("batch", "kvseq", None, "model")
+    return {"k": kv, "v": kv, "pos": ("batch", "kvseq"), "ins": ("batch",)}
+
+
+def attn_cache_from_prefill(cfg, k, v, *, is_local: bool, max_len: int):
+    """Build a decode cache from prefill K/V of shape (B, S, Hkv, D)."""
+    b, s_in = k.shape[:2]
+    size = min(cfg.window, max_len) if is_local else max_len
+    pos_in = jnp.arange(s_in, dtype=jnp.int32)
+    if is_local and s_in > size:
+        k = k[:, -size:]
+        v = v[:, -size:]
+        pos_keep = pos_in[-size:]
+    else:
+        pos_keep = pos_in
+    kept = k.shape[1]
+    kc = jnp.zeros((b, size, *k.shape[2:]), k.dtype)
+    vc = jnp.zeros((b, size, *v.shape[2:]), v.dtype)
+    pc = jnp.full((b, size), -1, jnp.int32)
+    if is_local:
+        # ring layout: token at absolute position p lives in slot p % size
+        slots = pos_keep % size
+        kc = kc.at[:, slots].set(k)
+        vc = vc.at[:, slots].set(v)
+        pc = pc.at[:, slots].set(jnp.broadcast_to(pos_keep, (b, kept)))
+    else:
+        kc = kc.at[:, :kept].set(k)
+        vc = vc.at[:, :kept].set(v)
+        pc = pc.at[:, :kept].set(jnp.broadcast_to(pos_keep, (b, kept)))
+    ins = jnp.full((b,), s_in, jnp.int32)
+    return {"k": kc, "v": vc, "pos": pc, "ins": ins}

@@ -1,0 +1,154 @@
+"""Residual blocks: one init/apply pair per layer kind, with uniform
+(params, cache) structure inside each kind so stacks of the same kind can
+be scanned over.
+
+Kinds: "global" / "local" (attention + FFN-or-MoE), "recurrent"
+(RG-LRU + FFN), "mamba" (fused Mamba block).  ``cross=True`` adds
+encoder-decoder cross-attention to an attention block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common as C
+from . import attention as A
+from . import ffn as FF
+from . import moe as MOE
+from . import ssm as SSM
+from . import rglru as RG
+
+
+def block_init(key, cfg, kind: str, *, use_moe: bool, cross: bool,
+               dtype) -> C.Init:
+    ks = C.split_keys(key, 4)
+    p, s = {}, {}
+    if kind == "mamba":
+        p["ln"], s["ln"] = C.rmsnorm_init(cfg.d_model, dtype)
+        p["mamba"], s["mamba"] = SSM.mamba_init(ks[0], cfg, dtype)
+        return p, s
+    p["ln1"], s["ln1"] = C.rmsnorm_init(cfg.d_model, dtype)
+    if kind == "recurrent":
+        p["rec"], s["rec"] = RG.rglru_init(ks[0], cfg, dtype)
+    else:
+        p["attn"], s["attn"] = A.attn_init(ks[0], cfg, dtype)
+        if cross:
+            p["lnx"], s["lnx"] = C.rmsnorm_init(cfg.d_model, dtype)
+            p["xattn"], s["xattn"] = A.attn_init(ks[1], cfg, dtype)
+    p["ln2"], s["ln2"] = C.rmsnorm_init(cfg.d_model, dtype)
+    if use_moe:
+        p["moe"], s["moe"] = MOE.moe_init(ks[2], cfg, dtype)
+    else:
+        # MoE archs' dense layers use the wider combined width (deepseek)
+        d_ff = cfg.d_ff * (cfg.top_k + cfg.n_shared_experts) \
+            if cfg.n_experts else cfg.d_ff
+        p["mlp"], s["mlp"] = FF.ffn_init(ks[2], cfg, dtype, d_ff=d_ff)
+    return p, s
+
+
+def _mix_ffn(p, cfg, x):
+    if "moe" in p:
+        y, aux = MOE.moe_apply(p["moe"], cfg, x)
+        return y, aux
+    return FF.ffn_apply(p["mlp"], cfg, x), jnp.float32(0)
+
+
+def block_apply_train(p, cfg, kind: str, x, positions, *, causal=True,
+                      memory=None, q_chunk=512, k_chunk=512):
+    """Returns (x_out, aux_loss).  memory: encoder output for cross-attn."""
+    if kind == "mamba":
+        h, _ = SSM.mamba_apply_train(p["mamba"], cfg,
+                                     C.rmsnorm(p["ln"], x, cfg.norm_eps))
+        return x + h, jnp.float32(0)
+    h = C.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind == "recurrent":
+        h, _ = RG.rglru_apply_train(p["rec"], cfg, h)
+    else:
+        h, _ = A.attn_apply_train(p["attn"], cfg, h, positions,
+                                  is_local=(kind == "local"), causal=causal,
+                                  q_chunk=q_chunk, k_chunk=k_chunk)
+        if cfg.parallel_block and "xattn" not in p:
+            # PaLM-style parallel residual: attn and MLP read the same
+            # normed input; their row-parallel partial sums are added
+            # BEFORE the residual, so GSPMD emits one all-reduce/layer
+            # instead of two (§Perf, llava iteration).
+            h2, aux = _mix_ffn(p, cfg,
+                               C.rmsnorm(p["ln2"], x, cfg.norm_eps))
+            return x + h + h2, aux
+    x = x + h
+    if "xattn" in p and memory is not None:
+        hx = C.rmsnorm(p["lnx"], x, cfg.norm_eps)
+        mem_pos = jnp.arange(memory.shape[1])[None, :]
+        q = C.dense_apply(p["xattn"]["wq"], hx).reshape(
+            *hx.shape[:2], cfg.n_heads, cfg.resolved_head_dim)
+        k = C.dense_apply(p["xattn"]["wk"], memory).reshape(
+            *memory.shape[:2], cfg.n_kv_heads, cfg.resolved_head_dim)
+        v = C.dense_apply(p["xattn"]["wv"], memory).reshape(
+            *memory.shape[:2], cfg.n_kv_heads, cfg.resolved_head_dim)
+        o = A.flash_attention(q, k, v, causal=False, window=None,
+                              q_chunk=q_chunk, k_chunk=k_chunk)
+        x = x + C.dense_apply(p["xattn"]["wo"],
+                              o.reshape(*hx.shape[:2], -1))
+    h2, aux = _mix_ffn(p, cfg, C.rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return x + h2, aux
+
+
+def block_apply_decode(p, cfg, kind: str, x, cache, pos):
+    """Single-token step. Returns (x_out, new_cache)."""
+    if kind == "mamba":
+        h, new_c = SSM.mamba_apply_decode(
+            p["mamba"], cfg, C.rmsnorm(p["ln"], x, cfg.norm_eps), cache)
+        return x + h, new_c
+    h = C.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind == "recurrent":
+        h, new_c = RG.rglru_apply_decode(p["rec"], cfg, h, cache)
+    else:
+        h, self_c = A.attn_apply_decode(p["attn"], cfg, h, cache["self"]
+                                        if "self" in cache else cache, pos,
+                                        is_local=(kind == "local"))
+        new_c = dict(cache, self=self_c) if "self" in cache else self_c
+    x = x + h
+    if "xattn" in p and "xk" in cache:
+        hx = C.rmsnorm(p["lnx"], x, cfg.norm_eps)
+        b = x.shape[0]
+        q = C.dense_apply(p["xattn"]["wq"], hx).reshape(
+            b, 1, cfg.n_heads, cfg.resolved_head_dim)
+        s_enc = cache["xk"].shape[1]
+        kv_pos = jnp.broadcast_to(jnp.arange(s_enc, dtype=jnp.int32),
+                                  (b, s_enc))
+        o = A.decode_attention(q, cache["xk"], cache["xv"], kv_pos,
+                               jnp.full((b,), s_enc, jnp.int32))
+        x = x + C.dense_apply(p["xattn"]["wo"], o.reshape(b, 1, -1))
+    h2, _ = _mix_ffn(p, cfg, C.rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return x + h2, new_c
+
+
+def block_cache_init(cfg, kind: str, batch: int, max_len: int, *,
+                     cross: bool, dtype):
+    if kind == "mamba":
+        return SSM.mamba_cache_init(cfg, batch, dtype)
+    if kind == "recurrent":
+        return RG.rglru_cache_init(cfg, batch, dtype)
+    c = A.attn_cache_init(cfg, batch, max_len,
+                          is_local=(kind == "local"), dtype=dtype)
+    if cross:
+        hd = cfg.resolved_head_dim
+        return {"self": c,
+                "xk": jnp.zeros((batch, cfg.frontend_seq, cfg.n_kv_heads, hd),
+                                dtype),
+                "xv": jnp.zeros((batch, cfg.frontend_seq, cfg.n_kv_heads, hd),
+                                dtype)}
+    return c
+
+
+def block_cache_specs(cfg, kind: str, *, cross: bool):
+    if kind == "mamba":
+        return SSM.mamba_cache_specs()
+    if kind == "recurrent":
+        return RG.rglru_cache_specs()
+    c = A.attn_cache_specs(cfg, is_local=(kind == "local"))
+    if cross:
+        xkv = ("batch", None, "model", None) \
+            if cfg.n_kv_heads % 16 == 0 else ("batch", None, None, "model")
+        return {"self": c, "xk": xkv, "xv": xkv}
+    return c

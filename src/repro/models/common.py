@@ -1,0 +1,95 @@
+"""Shared model components: init helpers, norms, RoPE, activations.
+
+Every init helper returns ``(params, specs)`` with matching pytree
+structure; ``specs`` leaves are tuples of LOGICAL axis names (see
+``models.sharding``), converted to PartitionSpec by the launcher.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Init = Tuple[dict, dict]
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, in_dim: int, out_dim: int, spec, dtype,
+               bias: bool = False, scale: float | None = None) -> Init:
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    w = (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+    p, s = {"w": w}, {"w": spec}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+        s["b"] = (spec[-1],)
+    return p, s
+
+
+def dense_apply(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def rmsnorm_init(dim: int, dtype) -> Init:
+    return {"g": jnp.ones((dim,), dtype)}, {"g": (None,)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * inv).astype(dt) * p["g"].astype(dt)
+
+
+def activation(name: str):
+    if name in ("silu", "geglu_silu"):
+        return jax.nn.silu
+    if name in ("gelu", "geglu"):
+        return jax.nn.gelu
+    raise ValueError(name)
+
+
+# ----------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+VOCAB_PAD = 128  # pad vocab so the table shards on any production axis
+
+
+def padded_vocab(vocab: int) -> int:
+    return (vocab + VOCAB_PAD - 1) // VOCAB_PAD * VOCAB_PAD
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> Init:
+    """Embedding table, vocab PADDED to a multiple of 128 (Megatron-style)
+    so the vocab dim is shardable on the 16-wide model axis for archs like
+    granite (49155) / minicpm (122753) / seamless (256206)."""
+    vp = padded_vocab(vocab)
+    w = (jax.random.normal(key, (vp, dim), jnp.float32) * 0.02).astype(dtype)
+    return {"w": w}, {"w": ("model", None)}
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))

@@ -1,0 +1,39 @@
+"""Dense FFN (SiLU/GeLU gated or plain) + the SparseFFN hook.
+
+``sparse_ffn_density < 1`` swaps the dense matmuls for pJDS spMM — the
+paper's storage format as a first-class LM feature (see ``repro.sparse``).
+The dense path is what the dry-run/roofline exercises; SparseFFN is an
+inference-time compression demonstrated by examples and benchmarks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common as C
+from .sharding import shard
+
+
+def ffn_init(key, cfg, dtype, d_ff: int | None = None) -> C.Init:
+    d = cfg.d_model
+    ff = d_ff if d_ff is not None else cfg.d_ff
+    gated = cfg.act in ("silu", "geglu")
+    ks = C.split_keys(key, 3)
+    p, s = {}, {}
+    p["w1"], s["w1"] = C.dense_init(ks[0], d, ff, (None, "model"), dtype)
+    if gated:
+        p["w3"], s["w3"] = C.dense_init(ks[1], d, ff, (None, "model"), dtype)
+    p["w2"], s["w2"] = C.dense_init(ks[2], ff, d, ("model", None), dtype)
+    return p, s
+
+
+def ffn_apply(p, cfg, x):
+    act = C.activation(cfg.act)
+    h = C.dense_apply(p["w1"], x)
+    h = shard(h, "batch", None, "model")
+    if "w3" in p:
+        h = act(h) * C.dense_apply(p["w3"], x)
+    else:
+        h = act(h)
+    y = C.dense_apply(p["w2"], h)
+    return shard(y, "batch", None, None)

@@ -1,0 +1,237 @@
+"""Mixture-of-Experts FFN with SORTED-TOKEN dispatch.
+
+This is the paper's pJDS row-sort idea applied to expert routing
+(DESIGN.md §4): in pJDS, rows are sorted by length so that SIMD blocks
+are dense; here, tokens are sorted by assigned expert so that each
+expert's batch is a contiguous dense block for the per-expert GEMM.
+Token->expert dispatch IS a sparse-matrix product (a one-hot gate matrix
+times the token batch); sorting + capacity padding turns it into the
+block-dense layout a systolic/vector machine wants — ELLPACK-style
+padding (capacity) with a pJDS-style sort to minimise it.
+
+Capacity-based: each expert processes at most C = ceil(T*top_k/E * cf)
+tokens; overflow tokens are dropped (standard Switch/GShard semantics).
+Expert weight stacks are sharded on the EXPERT axis (expert parallel);
+GSPMD pads when n_experts is not divisible by the mesh axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common as C
+from .sharding import shard
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, cfg, dtype) -> C.Init:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    gated = cfg.act in ("silu", "geglu")
+    ks = C.split_keys(key, 5)
+    scale = 1.0 / np.sqrt(d)
+    p, s = {}, {}
+    p["router"], s["router"] = C.dense_init(ks[0], d, e, (None, None),
+                                            jnp.float32)
+    # Expert-parallel when E divides the model axis (deepseek: 64 experts);
+    # otherwise tensor-parallel inside each expert on the d_ff dim
+    # (granite: 40 experts, d_ff 512 -> 32/device).
+    ep = (e % 16 == 0)
+
+    def estack(k, i, o, ff_axis):
+        w = (jax.random.normal(k, (e, i, o), jnp.float32) * scale).astype(dtype)
+        spec = ("expert", None, None) if ep else \
+            (None, "model", None) if ff_axis == 1 else (None, None, "model")
+        return w, spec
+    p["w1"], s["w1"] = estack(ks[1], d, ff, 2)
+    if gated:
+        p["w3"], s["w3"] = estack(ks[2], d, ff, 2)
+    p["w2"], s["w2"] = estack(ks[3], ff, d, 1)
+    if cfg.n_shared_experts:
+        from .ffn import ffn_init
+        p["shared"], s["shared"] = ffn_init(
+            ks[4], cfg, dtype, d_ff=ff * cfg.n_shared_experts)
+    return p, s
+
+
+def moe_apply(p, cfg, x):
+    """x: (B, S, D) -> (B, S, D)."""
+    b, s_len, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s_len
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"]["w"])        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, k)                    # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    if cfg.moe_dispatch == "onehot":
+        return _moe_onehot(p, cfg, x, xt, gates, experts, probs)
+
+    shards = cfg.moe_local_shards
+    if shards > 1 and t % shards == 0:
+        # §Perf optimization (EXPERIMENTS.md §Perf, deepseek iterations):
+        # sort/dispatch PER DATA SHARD with an explicit leading shard
+        # axis, so (a) the argsort/scatter never crosses the data axis and
+        # (b) the (S, E, C, D) buffer can carry explicit ("batch",
+        # "expert") sharding constraints — the expert GEMM is then fully
+        # local per (data, model) device pair and the only cross-device
+        # move is the token all-to-all, as in a hand-written EP MoE.
+        y = _sorted_dispatch_sharded(p, cfg, xt, gates, experts, shards)
+    else:
+        y = _sorted_dispatch(p, cfg, xt, gates, experts, constrain=True)
+
+    if "shared" in p:
+        from .ffn import ffn_apply
+        y = y + ffn_apply(p["shared"], cfg, xt.reshape(b, s_len, d)
+                          ).reshape(t, d)
+    y = y.reshape(b, s_len, d).astype(x.dtype)
+    return shard(y, "batch", None, None), _aux_loss(probs, experts, e)
+
+
+def _sorted_dispatch(p, cfg, xt, gates, experts, *, constrain: bool):
+    """Sorted (pJDS-style) dispatch for one token block xt: (T, D)."""
+    t, d = xt.shape
+    e, k = cfg.n_experts, cfg.top_k
+
+    # ---- sorted dispatch (the pJDS sort step, applied to tokens) ----
+    flat_expert = experts.reshape(-1)                           # (T*k,)
+    order = jnp.argsort(flat_expert)                            # stable
+    sorted_expert = flat_expert[order]
+    # position of each dispatched copy within its expert's batch
+    pos_in_expert = jnp.arange(t * k) - jnp.searchsorted(
+        sorted_expert, sorted_expert, side="left")
+    cap = int(np.ceil(t * k / e * cfg.capacity_factor))
+    keep = pos_in_expert < cap
+    token_of = order // k                                       # (T*k,)
+
+    # scatter tokens into the (E, C, D) block-dense buffer
+    slot = sorted_expert * cap + pos_in_expert
+    slot = jnp.where(keep, slot, e * cap)                       # overflow bin
+    buf = jnp.zeros((e * cap + 1, d), xt.dtype).at[slot].set(xt[token_of])
+    buf = buf[:-1].reshape(e, cap, d)
+    if constrain and e % 16 == 0:  # expert-parallel only when E shards
+        buf = shard(buf, "expert", None, None)
+
+    # ---- per-expert dense GEMMs (the block-dense compute pJDS enables) --
+    act = C.activation(cfg.act)
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w1"].astype(buf.dtype))
+    if "w3" in p:
+        h = act(h) * jnp.einsum("ecd,edf->ecf", buf, p["w3"].astype(buf.dtype))
+    else:
+        h = act(h)
+    if constrain:
+        if e % 16 == 0:
+            h = shard(h, "expert", None, None)
+        else:
+            h = shard(h, None, None, "model")
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(buf.dtype))
+
+    # ---- combine (unsort + gate-weighted sum) ----
+    flat_out = out_buf.reshape(e * cap, d)
+    flat_gate = gates.reshape(-1)[order]
+    contrib = jnp.where(keep[:, None],
+                        flat_out[jnp.minimum(slot, e * cap - 1)], 0)
+    contrib = contrib * flat_gate[:, None].astype(contrib.dtype)
+    return jnp.zeros((t, d), contrib.dtype).at[token_of].add(contrib)
+
+
+def _sorted_dispatch_sharded(p, cfg, xt, gates, experts, shards):
+    """Batched sorted dispatch with an explicit (data-)shard axis."""
+    t, d = xt.shape
+    e, k = cfg.n_experts, cfg.top_k
+    tl = t // shards
+    ep = (e % 16 == 0)
+    espec = "expert" if ep else None
+
+    xt_s = shard(xt.reshape(shards, tl, d), "batch", None, None)
+    g_s = gates.reshape(shards, tl * k)
+    e_s = experts.reshape(shards, tl * k)
+
+    order = jnp.argsort(e_s, axis=1)                        # (S, tl*k)
+    sorted_e = jnp.take_along_axis(e_s, order, axis=1)
+    first = jax.vmap(lambda se: jnp.searchsorted(se, se, side="left"))(
+        sorted_e)
+    pos_in_e = jnp.arange(tl * k)[None, :] - first
+    cap = int(np.ceil(tl * k / e * cfg.capacity_factor))
+    keep = pos_in_e < cap
+    token_of = order // k                                    # (S, tl*k)
+
+    slot = sorted_e * cap + pos_in_e
+    slot = jnp.where(keep, slot, e * cap)
+    gathered = jnp.take_along_axis(xt_s, token_of[..., None], axis=1)
+    buf = jnp.zeros((shards, e * cap + 1, d), xt.dtype)
+    buf = jax.vmap(lambda b, s_, g: b.at[s_].set(g))(buf, slot, gathered)
+    buf = buf[:, :-1].reshape(shards, e, cap, d)
+    buf = shard(buf, "batch", espec, None, None)
+
+    act = C.activation(cfg.act)
+    h = jnp.einsum("secd,edf->secf", buf, p["w1"].astype(buf.dtype))
+    if "w3" in p:
+        h = act(h) * jnp.einsum("secd,edf->secf", buf,
+                                p["w3"].astype(buf.dtype))
+    else:
+        h = act(h)
+    h = shard(h, "batch", espec, None, None if ep else "model")
+    out_buf = jnp.einsum("secf,efd->secd", h, p["w2"].astype(buf.dtype))
+    out_buf = shard(out_buf, "batch", espec, None, None)
+
+    flat_out = out_buf.reshape(shards, e * cap, d)
+    flat_gate = jnp.take_along_axis(g_s, order, axis=1)
+    contrib = jnp.take_along_axis(
+        flat_out, jnp.minimum(slot, e * cap - 1)[..., None], axis=1)
+    contrib = jnp.where(keep[..., None], contrib, 0)
+    contrib = contrib * flat_gate[..., None].astype(contrib.dtype)
+    y = jnp.zeros((shards, tl, d), contrib.dtype)
+    y = jax.vmap(lambda yy, tok, c: yy.at[tok].add(c))(y, token_of, contrib)
+    return shard(y, "batch", None, None).reshape(t, d)
+
+
+def _moe_onehot(p, cfg, x, xt, gates, experts, probs):
+    """BASELINE dispatch: dense one-hot gate matrix (GShard-style einsum).
+
+    This is the 'ELLPACK without the sort' of expert routing — every
+    token is multiplied against a (T, E, C) one-hot tensor, materialising
+    the full padded dispatch even though only top_k entries per token are
+    non-zero.  Kept as the §Perf contrast for the sorted (pJDS-analogue)
+    path; selected via ``cfg.moe_dispatch='onehot'``.
+    """
+    b, s_len, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s_len
+    cap = int(np.ceil(t * k / e * cfg.capacity_factor))
+    # position of each (token, k) assignment within its expert via cumsum
+    onehot = jax.nn.one_hot(experts, e, dtype=jnp.int32)       # (T, k, E)
+    flat = onehot.reshape(t * k, e)
+    pos = jnp.cumsum(flat, axis=0) - flat                      # (T*k, E)
+    pos_in_e = (pos * flat).sum(-1).reshape(t, k)
+    keep = pos_in_e < cap
+    disp = (jax.nn.one_hot(experts, e, dtype=xt.dtype)[..., :, None]
+            * jax.nn.one_hot(pos_in_e, cap, dtype=xt.dtype)[..., None, :]
+            * keep[..., None, None].astype(xt.dtype))          # (T,k,E,C)
+    buf = jnp.einsum("td,tkec->ecd", xt, disp)                 # (E,C,D)
+    act = C.activation(cfg.act)
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w1"].astype(buf.dtype))
+    if "w3" in p:
+        h = act(h) * jnp.einsum("ecd,edf->ecf", buf, p["w3"].astype(buf.dtype))
+    else:
+        h = act(h)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(buf.dtype))
+    combine = disp * gates[..., None, None].astype(xt.dtype)
+    y = jnp.einsum("ecd,tkec->td", out_buf, combine)
+    if "shared" in p:
+        from .ffn import ffn_apply
+        y = y + ffn_apply(p["shared"], cfg, x).reshape(t, d)
+    y = y.reshape(b, s_len, d).astype(x.dtype)
+    return shard(y, "batch", None, None), _aux_loss(probs, experts, e)
+
+
+def _aux_loss(probs, experts, e):
+    """Switch-style load-balancing auxiliary loss."""
+    t = probs.shape[0]
+    me = probs.mean(0)                                   # (E,) mean router prob
+    one_hot = jax.nn.one_hot(experts[:, 0], e, dtype=jnp.float32)
+    ce = one_hot.mean(0)                                 # fraction routed (top-1)
+    return e * jnp.sum(me * ce)

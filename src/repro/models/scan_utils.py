@@ -1,0 +1,81 @@
+"""Chunked linear-recurrence scan shared by Mamba and RG-LRU.
+
+Computes h_t = a_t * h_{t-1} + b_t over the time axis with a TWO-LEVEL
+scan: a sequential ``lax.scan`` over chunks carrying the boundary state,
+and an ``associative_scan`` inside each chunk.  This bounds the
+materialised intermediate to (B, chunk, ...) instead of (B, S, ...) —
+for falcon-mamba's (d_inner, d_state) = (8192, 16) state at train_4k the
+full-S f32 intermediate would be ~2 GiB/device even with d_inner sharded
+16-way, the chunked form ~130 MiB (DESIGN.md: TPU memory-hierarchy
+adaptation of the GPU selective-scan kernel's SRAM chunking).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from .unroll import scan_unroll, cost_mode
+
+
+def chunked_linear_scan(a: jax.Array, b: jax.Array, h0: jax.Array,
+                        chunk: int = 0):
+    """a, b: (B, S, ...); h0: (B, ...). Returns (h_all: (B, S, ...), h_last).
+
+    h_t = a_t * h_{t-1} + b_t, with h_0 the state *before* the sequence.
+
+    chunk = 0 selects the default schedule: 1024 normally (raised from
+    128 after the §Perf falcon iterations — streamed bytes GROW as
+    chunks shrink, ~3.5x at 512 vs whole-sequence, because every chunk
+    re-streams its tensors through log2(chunk) scan levels plus
+    boundary materialisations; 1024 keeps the f32 working set ~0.5 GiB
+    per live tensor on the production shard), collapsed to a single
+    whole-sequence associative_scan in cost mode (log-depth straight-
+    line HLO — every flop visible to cost analysis without unrolling a
+    loop).  An explicit chunk is honoured even in cost mode, which is
+    how the §Perf iterations measure the chunk trade-off with
+    consistent methodology.
+    """
+    B, S = a.shape[:2]
+    if chunk == 0:
+        chunk = S if cost_mode() else 1024
+    chunk = next(c for c in range(min(chunk, S), 0, -1) if S % c == 0)
+    n = S // chunk
+    rest = a.shape[2:]
+    a_c = a.reshape(B, n, chunk, *rest)
+    b_c = b.reshape(B, n, chunk, *rest)
+
+    def combine(c1, c2):
+        # c2 is later in time: h = a2*(a1*h + b1) + b2
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    def chunk_step(h, ab):
+        a_k, b_k = ab                                  # (B, chunk, ...)
+        acc_a, acc_b = jax.lax.associative_scan(
+            combine, (a_k, b_k), axis=1)
+        h_all = acc_a * h[:, None] + acc_b             # (B, chunk, ...)
+        return h_all[:, -1], h_all
+
+    # scan over the chunk axis (time-major)
+    h_last, h_chunks = jax.lax.scan(
+        chunk_step, h0,
+        (jnp.moveaxis(a_c, 1, 0), jnp.moveaxis(b_c, 1, 0)),
+        unroll=scan_unroll())
+    h_all = jnp.moveaxis(h_chunks, 0, 1).reshape(B, S, *rest)
+    return h_all, h_last
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, bias: jax.Array,
+                  state: jax.Array | None = None):
+    """Depthwise causal conv. x: (B, S, C); w: (W, C); state: (B, W-1, C)
+    carries the last W-1 inputs from the previous segment.
+    Returns (y: (B, S, C), new_state)."""
+    B, S, C = x.shape
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, W - 1, C), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)  # (B, S+W-1, C)
+    y = sum(xp[:, i:i + S] * w[i].astype(x.dtype) for i in range(W))
+    y = y + bias.astype(x.dtype)
+    new_state = xp[:, -(W - 1):] if W > 1 else jnp.zeros((B, 0, C), x.dtype)
+    return y, new_state

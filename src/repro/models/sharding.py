@@ -1,0 +1,93 @@
+"""Logical-axis sharding rules (MaxText-style), resolved lazily.
+
+Models annotate params/activations with LOGICAL axis names; the launcher
+installs a mapping to physical mesh axes.  With no rules installed (unit
+tests, single device) annotations are no-ops.
+
+Logical axes:
+  batch   -> ("pod", "data") on the multi-pod mesh, ("data",) single-pod
+  model   -> ("model",)   tensor-parallel dim (heads / d_ff / vocab / experts)
+  expert  -> ("model",)   expert-parallel dim for MoE stacks
+  seq     -> None         (sequence kept unsharded; SP is a perf knob)
+  None    -> replicated
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_RULES: Optional[dict] = None
+
+DEFAULT_SINGLE_POD = {
+    "batch": ("data",),
+    "model": ("model",),
+    "expert": ("model",),
+    "seq": None,
+    "kvseq": None,
+}
+
+DEFAULT_MULTI_POD = {
+    "batch": ("pod", "data"),
+    "model": ("model",),
+    "expert": ("model",),
+    "seq": None,
+    "kvseq": None,
+}
+
+
+def rules_for(shape_kind: str, global_batch: int, mesh_shape: dict) -> dict:
+    """Pick logical->physical rules for a (shape, mesh) cell.
+
+    Context parallelism for tiny-batch decode (long_500k, B=1): the batch
+    cannot shard over the data axis, so the KV-cache SEQUENCE dim takes it
+    instead — the paper's row-partitioning idea applied to the KV cache.
+    """
+    multi = "pod" in mesh_shape
+    rules = dict(DEFAULT_MULTI_POD if multi else DEFAULT_SINGLE_POD)
+    data_ways = mesh_shape.get("data", 1) * mesh_shape.get("pod", 1)
+    if shape_kind == "decode" and global_batch % data_ways != 0:
+        rules["batch"] = None
+        rules["kvseq"] = ("pod", "data") if multi else ("data",)
+    return rules
+
+
+def set_rules(rules: Optional[dict]) -> None:
+    global _RULES
+    _RULES = rules
+
+
+def get_rules() -> Optional[dict]:
+    return _RULES
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[dict]):
+    global _RULES
+    prev = _RULES
+    _RULES = rules
+    try:
+        yield
+    finally:
+        _RULES = prev
+
+
+def logical_to_pspec(axes: Sequence[Optional[str]],
+                     rules: Optional[dict] = None) -> P:
+    rules = rules if rules is not None else _RULES
+    if rules is None:
+        return P()
+    resolved = []
+    for a in axes:
+        r = rules.get(a) if a else None
+        resolved.append(r if r else None)
+    return P(*resolved)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Annotate an activation with logical axes (no-op without rules)."""
+    if _RULES is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, logical_to_pspec(axes))

@@ -1,0 +1,109 @@
+"""Mamba-1 (selective SSM) block — falcon-mamba-7b's layer type.
+
+TPU adaptation of the CUDA selective-scan kernel (DESIGN.md §2): the
+recurrence is a chunked two-level scan (``scan_utils``); ``d_inner`` is
+tensor-sharded over the model axis, so the (B, chunk, d_inner, d_state)
+discretised-A intermediate stays ~tens of MiB per device.
+
+Decode is O(1): the carried state is (B, d_inner, d_state) + a (W-1)-tap
+conv tail — why this arch runs the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import common as C
+from .scan_utils import chunked_linear_scan, causal_conv1d
+from .sharding import shard
+
+
+def mamba_init(key, cfg, dtype) -> C.Init:
+    d, di, n, r = cfg.d_model, cfg.d_inner, cfg.ssm_state, max(cfg.dt_rank, 1)
+    cw = cfg.conv_width
+    ks = C.split_keys(key, 6)
+    p, s = {}, {}
+    p["in_proj"], s["in_proj"] = C.dense_init(ks[0], d, 2 * di,
+                                              (None, "model"), dtype)
+    p["conv_w"] = (jax.random.normal(ks[1], (cw, di), jnp.float32)
+                   / np.sqrt(cw)).astype(dtype)
+    s["conv_w"] = (None, "model")
+    p["conv_b"] = jnp.zeros((di,), dtype)
+    s["conv_b"] = ("model",)
+    p["x_proj"], s["x_proj"] = C.dense_init(ks[2], di, r + 2 * n,
+                                            ("model", None), dtype)
+    p["dt_proj"], s["dt_proj"] = C.dense_init(ks[3], r, di, (None, "model"),
+                                              dtype, bias=True)
+    # S4D-real initialisation of A
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    p["A_log"] = jnp.log(a)
+    s["A_log"] = ("model", None)
+    p["D"] = jnp.ones((di,), jnp.float32)
+    s["D"] = ("model",)
+    p["out_proj"], s["out_proj"] = C.dense_init(ks[5], di, d,
+                                                ("model", None), dtype)
+    return p, s
+
+
+def _ssm_inputs(p, cfg, x_conv):
+    """Shared between train scan and decode step.
+    x_conv: (B, S, di) post-conv activations."""
+    n, r = cfg.ssm_state, max(cfg.dt_rank, 1)
+    proj = C.dense_apply(p["x_proj"], x_conv)
+    dt_in, b_in, c_in = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(C.dense_apply(p["dt_proj"], dt_in).astype(jnp.float32))
+    a_mat = -jnp.exp(p["A_log"].astype(jnp.float32))          # (di, n)
+    da = jnp.exp(dt[..., None] * a_mat)                       # (B,S,di,n)
+    dbx = (dt * x_conv.astype(jnp.float32))[..., None] \
+        * b_in.astype(jnp.float32)[..., None, :]              # (B,S,di,n)
+    return da, dbx, c_in
+
+
+def mamba_apply_train(p, cfg, x, ssm_chunk: int | None = None):
+    """x: (B, S, D) normalised input. Returns (out, final_state_dict)."""
+    B, S, _ = x.shape
+    di = cfg.d_inner
+    xz = C.dense_apply(p["in_proj"], x)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = shard(xs, "batch", None, "model")
+    xc, conv_state = causal_conv1d(xs, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    da, dbx, c_in = _ssm_inputs(p, cfg, xc)
+    h0 = jnp.zeros((B, di, cfg.ssm_state), jnp.float32)
+    chunk = ssm_chunk if ssm_chunk is not None else cfg.ssm_scan_chunk
+    h_all, h_last = chunked_linear_scan(da, dbx, h0, chunk=chunk)
+    y = jnp.einsum("bsdn,bsn->bsd", h_all,
+                   c_in.astype(jnp.float32))                   # (B,S,di)
+    y = y + p["D"].astype(jnp.float32) * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = C.dense_apply(p["out_proj"], y)
+    return shard(out, "batch", None, None), {"conv": conv_state, "h": h_last}
+
+
+def mamba_apply_decode(p, cfg, x, cache):
+    """Single-step decode. x: (B, 1, D); cache: {conv, h}."""
+    xz = C.dense_apply(p["in_proj"], x)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = causal_conv1d(xs, p["conv_w"], p["conv_b"],
+                                   state=cache["conv"])
+    xc = jax.nn.silu(xc)
+    da, dbx, c_in = _ssm_inputs(p, cfg, xc)                    # S = 1
+    h = da[:, 0] * cache["h"] + dbx[:, 0]                      # (B,di,n)
+    y = jnp.einsum("bdn,bn->bd", h, c_in[:, 0].astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32) * xc[:, 0].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
+    out = C.dense_apply(p["out_proj"], y[:, None])
+    return out, {"conv": conv_state, "h": h}
+
+
+def mamba_cache_init(cfg, batch: int, dtype=jnp.bfloat16):
+    di = cfg.d_inner
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di), dtype),
+        "h": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba_cache_specs():
+    return {"conv": ("batch", None, "model"), "h": ("batch", "model", None)}

@@ -1,0 +1,35 @@
+"""Cost-mode switch: fully unroll every lax.scan.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+count, so the scan-over-layers / flash-pair-scan / chunked-linear-scan
+structure that keeps compile times tractable also makes
+``cost_analysis()`` useless on the full model.  The dry-run therefore
+lowers small UNROLLED variants (reduced depth + sequence) with this flag
+on, where every flop is visible, and extrapolates exactly (dryrun.py:
+linear model in [1, tokens, attn-pairs] x per-period depth delta).
+"""
+from __future__ import annotations
+
+import contextlib
+
+_COST_MODE = False
+
+
+def cost_mode() -> bool:
+    return _COST_MODE
+
+
+def scan_unroll() -> bool | int:
+    """Pass as ``unroll=`` to lax.scan: fully unrolled in cost mode."""
+    return True if _COST_MODE else 1
+
+
+@contextlib.contextmanager
+def cost_mode_enabled():
+    global _COST_MODE
+    prev = _COST_MODE
+    _COST_MODE = True
+    try:
+        yield
+    finally:
+        _COST_MODE = prev

@@ -1,0 +1,114 @@
+"""SparseFFN: pruned FFN weights stored in pJDS, applied with pjds_spmm.
+
+The paper's storage format promoted to a first-class LM feature
+(DESIGN.md §4): magnitude-prune a trained FFN to ``density``, convert the
+surviving weights to pJDS, and run the forward pass as multi-RHS spMVM.
+
+Memory story (the paper's Table-1 argument, on LM weights): an FFN with
+density d stores ~d * (4+4)/2 bytes per original bf16 element (f32 value
++ int32 index, halved... see ``memory_summary``), so densities below ~1/6
+shrink the footprint vs dense bf16 while pJDS (vs ELLPACK) keeps the
+padding overhead <1% even though per-row non-zero counts after magnitude
+pruning vary wildly — exactly the row-length-variance regime (Fig. 3)
+pJDS was designed for.
+
+This module is single-device (inference compression); the distributed
+dry-run path uses dense FFN.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats as F
+from repro.kernels import ops
+
+
+@dataclasses.dataclass
+class SparseLinear:
+    """y = x @ W with W^T stored in pJDS (rows = output features)."""
+
+    a: ops.PJDSDevice
+    perm: np.ndarray          # row sort of the OUTPUT features
+    n_out: int
+    n_in_pad: int
+    density: float
+
+    @staticmethod
+    def from_dense(w: np.ndarray, density: float, b_r: int = 128,
+                   chunk_l: int = 8) -> "SparseLinear":
+        """Magnitude-prune ``w`` (in, out) to ``density`` and pack."""
+        n_in, n_out = w.shape
+        k = max(int(w.size * density), 1)
+        thresh = np.partition(np.abs(w).ravel(), -k)[-k]
+        wp = np.where(np.abs(w) >= thresh, w, 0.0)
+        # pJDS over W^T: each row = one output feature's input weights
+        csr = F.csr_from_dense(np.asarray(wp.T, dtype=np.float32))
+        pj = F.csr_to_pjds(csr, b_r=b_r, diag_align=chunk_l,
+                           permuted_cols=False)
+        return SparseLinear(
+            a=ops.to_device_pjds(pj, chunk_l=chunk_l),
+            perm=pj.perm,
+            n_out=n_out,
+            n_in_pad=_pad(n_in, 1),
+            density=float((wp != 0).mean()),
+        )
+
+    def __call__(self, x: jax.Array, backend: ops.Backend = "ref") -> jax.Array:
+        """x: (..., n_in) -> (..., n_out)."""
+        lead = x.shape[:-1]
+        n_in = x.shape[-1]
+        xt = x.reshape(-1, n_in).T                    # (n_in, T)
+        t = xt.shape[1]
+        t_pad = _pad(t, 128)
+        xt = jnp.pad(xt, ((0, 0), (0, t_pad - t)))
+        y_perm = ops.pjds_matmat(self.a, xt, backend=backend)  # (rows_pad, T)
+        # unpermute rows back to output-feature order
+        inv = np.zeros(self.a.n_rows_pad, np.int32)
+        valid = self.perm < self.n_out
+        inv_idx = jnp.asarray(self.perm[valid])
+        y = jnp.zeros((self.n_out, t_pad), y_perm.dtype)
+        y = y.at[inv_idx].set(y_perm[jnp.asarray(np.nonzero(valid)[0])])
+        return y[:, :t].T.reshape(*lead, self.n_out).astype(x.dtype)
+
+    def memory_summary(self, dense_bytes_per_el: int = 2) -> dict:
+        dense = self.n_in_pad * self.n_out * dense_bytes_per_el
+        stored = ops_storage_bytes(self.a)
+        csr_min = int(self.density * self.n_in_pad * self.n_out) * 8
+        return {"dense_bytes": dense, "pjds_bytes": stored,
+                "ratio_vs_dense": stored / dense,
+                "padding_overhead": stored / max(csr_min, 1) - 1.0}
+
+
+def ops_storage_bytes(a: ops.PJDSDevice, value_bytes: int = 4,
+                      index_bytes: int = 4) -> int:
+    return int(a.val.size) * (value_bytes + index_bytes) \
+        + int(a.chunk_map.size) * 4
+
+
+def _pad(x, m):
+    return (x + m - 1) // m * m
+
+
+def sparsify_ffn_params(ffn_params: dict, density: float) -> dict:
+    """Convert a dense FFN param dict (w1/w3/w2) to SparseLinear ops."""
+    out = {}
+    for k, v in ffn_params.items():
+        w = np.asarray(jax.device_get(v["w"]), np.float32)
+        out[k] = SparseLinear.from_dense(w, density)
+    return out
+
+
+def sparse_ffn_apply(sp: dict, cfg, x: jax.Array,
+                     backend: ops.Backend = "ref") -> jax.Array:
+    from repro.models.common import activation
+    act = activation(cfg.act)
+    h = sp["w1"](x, backend)
+    if "w3" in sp:
+        h = act(h) * sp["w3"](x, backend)
+    else:
+        h = act(h)
+    return sp["w2"](h, backend)

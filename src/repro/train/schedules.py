@@ -1,0 +1,35 @@
+"""LR schedules, including WSD (warmup-stable-decay) from MiniCPM
+(arXiv:2404.06395) — the schedule the assigned minicpm-2b was trained
+with — plus cosine for the other archs."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd(peak_lr: float, warmup: int, stable: int, decay: int,
+        final_frac: float = 0.1):
+    """Warmup-Stable-Decay: linear warmup, flat plateau, exponential-ish
+    decay to final_frac * peak over the decay window."""
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        dec_t = jnp.clip((s - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = peak_lr * jnp.exp(jnp.log(final_frac) * dec_t)
+        return jnp.where(s < warmup, warm,
+                         jnp.where(s < warmup + stable, peak_lr, dec))
+    return fn
+
+
+def cosine(peak_lr: float, warmup: int, total: int,
+           final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup, warm, peak_lr * cos)
+    return fn
+
+
+def constant(lr: float):
+    return lambda step: jnp.full((), lr, jnp.float32)

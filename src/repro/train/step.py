@@ -1,0 +1,64 @@
+"""train_step / eval_step builders + sharding wiring for pjit.
+
+``make_sharded_train_step`` returns a jit-compiled step with explicit
+in/out shardings derived from the model's logical param specs, the
+ZeRO-1 optimizer-state specs, and the batch specs — the single function
+the launcher lowers for the dry-run and runs for real training.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.sharding import logical_to_pspec, use_rules
+from .optimizer import AdamW, AdamWState, zero1_specs
+
+
+def make_train_step(model, opt: AdamW, *, remat: bool = True,
+                    q_chunk: int = 512, k_chunk: int = 512):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, aux = model.loss(p, batch, remat=remat, q_chunk=q_chunk,
+                                   k_chunk=k_chunk)
+            return loss, aux
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params, new_state, info = opt.update(grads, opt_state, params)
+        metrics = {"loss": loss, **{k: v for k, v in aux.items()}, **info}
+        return new_params, new_state, metrics
+    return train_step
+
+
+def _tuple_leaf(x):
+    return isinstance(x, tuple)
+
+
+def specs_to_shardings(spec_tree, mesh: Mesh, rules: dict):
+    """Logical-axes tuples -> NamedSharding tree."""
+    def one(axes):
+        with use_rules(rules):
+            return NamedSharding(mesh, logical_to_pspec(axes))
+    return jax.tree.map(one, spec_tree, is_leaf=_tuple_leaf)
+
+
+def train_state_shardings(model, mesh: Mesh, rules: dict):
+    """(param_shardings, opt_shardings) for the mesh."""
+    pspecs = model.param_specs()
+    pshapes = model.param_shapes()
+    param_sh = specs_to_shardings(pspecs, mesh, rules)
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    with use_rules(rules):
+        z1 = zero1_specs(pspecs, pshapes, mesh, data_axes=data_axes)
+    state_leaf_sh = jax.tree.map(
+        lambda axes: NamedSharding(mesh, P(*axes)), z1, is_leaf=_tuple_leaf)
+    scalar = NamedSharding(mesh, P())
+    opt_sh = AdamWState(step=scalar, m=state_leaf_sh, v=state_leaf_sh,
+                        master=state_leaf_sh)
+    return param_sh, opt_sh
+
+
+def batch_shardings(batch_specs, mesh: Mesh, rules: dict):
+    return specs_to_shardings(batch_specs, mesh, rules)

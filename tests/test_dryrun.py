@@ -1,0 +1,78 @@
+"""Dry-run machinery smoke test (subprocess, one cheap decode cell).
+
+The full 40-cell x 2-mesh sweep runs via
+``python -m repro.launch.dryrun --all`` and its results are recorded in
+EXPERIMENTS.md; this test proves the machinery end-to-end on the
+cheapest cell so CI catches regressions in the lowering path.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    from repro.launch.dryrun import dryrun_cell
+    import json
+    rec = dryrun_cell("seamless-m4t-medium", "decode_32k", "single",
+                      with_cost=False)
+    print("REC " + json.dumps({k: rec[k] for k in
+          ("status", "chips", "hlo_flops_raw")
+          if k in rec} | {"err": rec.get("error", "")[:200]}))
+""")
+
+
+@pytest.mark.slow
+def test_dryrun_decode_cell():
+    env = dict(os.environ, PYTHONPATH=os.path.join(
+        os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SCRIPT], capture_output=True,
+                       text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("REC ")][-1]
+    rec = json.loads(line[4:])
+    assert rec["status"] == "ok", rec
+    assert rec["chips"] == 256
+    assert rec["hlo_flops_raw"] > 0
+
+
+def test_skip_table_covers_non_subquadratic():
+    from repro.launch.dryrun import SKIP
+    from repro import configs
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get(arch)
+        if not cfg.subquadratic:
+            assert (arch, "long_500k") in SKIP, arch
+        else:
+            assert (arch, "long_500k") not in SKIP, arch
+
+
+def test_rules_for_context_parallel_decode():
+    from repro.models.sharding import rules_for
+    # long_500k: B=1 cannot shard over data -> kvseq takes the axis
+    r = rules_for("decode", 1, {"data": 16, "model": 16})
+    assert r["batch"] is None and r["kvseq"] == ("data",)
+    r2 = rules_for("decode", 128, {"pod": 2, "data": 16, "model": 16})
+    assert r2["batch"] == ("pod", "data") and r2["kvseq"] is None
+    r3 = rules_for("train", 256, {"data": 16, "model": 16})
+    assert r3["batch"] == ("data",)
+
+
+def test_collective_bytes_parser():
+    from repro.launch.hlo_analysis import collective_bytes
+    hlo = """
+      %ag = f32[16,512]{1,0} all-gather(f32[1,512]{1,0} %p), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={0}
+      %ar = bf16[1024]{0} all-reduce(bf16[1024]{0} %x), replica_groups=[16,16]
+      %agd = f32[16,512]{1,0} all-gather-done(f32[16,512]{1,0} %ags)
+      %cp = f32[256]{0} collective-permute(f32[256]{0} %y), source_target_pairs={{0,1}}
+    """
+    r = collective_bytes(hlo)
+    assert r["counts"] == {"all-gather": 1, "all-reduce": 1,
+                           "collective-permute": 1}
+    ag = 16 * 512 * 4 * 15 / 16
+    ar = 2 * 1024 * 2 * 15 / 16
+    cp = 256 * 4
+    assert abs(r["total"] - (ag + ar + cp)) < 1e-6

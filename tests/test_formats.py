@@ -1,0 +1,154 @@
+"""Format round-trips + memory accounting, incl. hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats as F
+from repro.core import matrices as M
+
+
+def random_sparse(rng, n, density=0.05, dtype=np.float64):
+    a = (rng.random((n, n)) < density) * rng.standard_normal((n, n))
+    return a.astype(dtype)
+
+
+def test_csr_roundtrip(rng):
+    a = random_sparse(rng, 200)
+    m = F.csr_from_dense(a)
+    assert np.array_equal(F.csr_to_dense(m), a)
+    assert m.nnz == np.count_nonzero(a)
+
+
+def test_csr_from_coo_duplicates():
+    rows = np.array([0, 0, 1])
+    cols = np.array([1, 1, 2])
+    vals = np.array([2.0, 3.0, 4.0])
+    m = F.csr_from_coo(rows, cols, vals, (3, 3))
+    d = F.csr_to_dense(m)
+    assert d[0, 1] == 5.0 and d[1, 2] == 4.0
+
+
+def test_ell_roundtrip(rng):
+    a = random_sparse(rng, 150)
+    m = F.csr_from_dense(a)
+    e = F.csr_to_ell(m, row_align=32, diag_align=8)
+    assert np.allclose(F.ell_to_dense(e), a)
+    assert e.val.shape[0] % 8 == 0 and e.n_rows_pad % 32 == 0
+
+
+def test_pjds_roundtrip_and_sort(rng):
+    a = random_sparse(rng, 200)
+    m = F.csr_from_dense(a)
+    p = F.csr_to_pjds(m, b_r=32)
+    assert np.allclose(F.pjds_to_dense(p), a)
+    # rows sorted by descending length
+    assert np.all(np.diff(p.rowlen) <= 0)
+    # blocks padded to block-local max
+    for b in range(p.n_blocks):
+        blk = p.rowlen[b * 32:(b + 1) * 32]
+        assert p.block_len[b] >= blk.max()
+        assert p.block_len[b] % 8 == 0
+
+
+def test_pjds_permutation_consistency(rng):
+    a = random_sparse(rng, 128, density=0.1)
+    m = F.csr_from_dense(a)
+    p = F.csr_to_pjds(m, b_r=32)
+    x = rng.standard_normal(128)
+    xp = p.permute(x)
+    # permuted matvec equals original-basis matvec
+    yp = np.zeros(p.n_rows_pad)
+    for b in range(p.n_blocks):
+        s, t = p.block_start[b], p.block_start[b + 1]
+        for r in range(p.b_r):
+            yp[b * 32 + r] = p.val[s:t, r] @ xp[p.col_idx[s:t, r]]
+    assert np.allclose(p.unpermute(yp), a @ x)
+
+
+def test_sell_matches_pjds_when_sigma_full(rng):
+    a = random_sparse(rng, 96)
+    m = F.csr_from_dense(a)
+    s = F.csr_to_sell(m, c=32, sigma=96)
+    p = F.csr_to_pjds(m, b_r=32)
+    assert F.storage_elements(s) == F.storage_elements(p)
+    assert np.allclose(F.sell_to_dense(s), a)
+
+
+def test_paper_worst_case_bound():
+    """Paper §2.1: one full row + singletons -> ELLPACK stores N*N,
+    pJDS stores <= (b_r+1)*N - b_r."""
+    n, br = 256, 32
+    a = np.zeros((n, n))
+    a[0, :] = 1.0
+    a[1:, 0] = 1.0
+    m = F.csr_from_dense(a)
+    ell = F.csr_to_ell(m, row_align=br, diag_align=1)
+    pj = F.csr_to_pjds(m, b_r=br, diag_align=1)
+    assert F.storage_elements(ell) == n * n
+    assert F.storage_elements(pj) <= (br + 1) * n - br
+    assert F.data_reduction_vs_ellpack(m, b_r=br) > 0.8
+
+
+def test_constant_row_length_no_overhead(rng):
+    """Paper §2.1: constant row length -> neither format has overhead."""
+    n, k = 128, 8
+    a = np.zeros((n, n))
+    for i in range(n):
+        a[i, (np.arange(k) * 7 + i) % n] = rng.standard_normal(k)
+    m = F.csr_from_dense(a)
+    ell = F.csr_to_ell(m, row_align=32, diag_align=8)
+    pj = F.csr_to_pjds(m, b_r=32, diag_align=8)
+    assert F.storage_elements(ell) == F.storage_elements(pj) == n * k
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(8, 120),
+    density=st.floats(0.01, 0.5),
+    b_r=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_pjds_roundtrip_property(n, density, b_r, seed):
+    rng = np.random.default_rng(seed)
+    a = (rng.random((n, n)) < density) * rng.standard_normal((n, n))
+    m = F.csr_from_dense(a)
+    p = F.csr_to_pjds(m, b_r=b_r)
+    assert np.allclose(F.pjds_to_dense(p), a, atol=1e-12)
+    # invariant: pJDS never stores more padded elements than ELLPACK
+    ell = F.csr_to_ell(m, row_align=b_r, diag_align=8)
+    assert F.storage_elements(p) <= F.storage_elements(ell)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), sigma_mult=st.sampled_from([1, 2, 4]))
+def test_sell_roundtrip_property(seed, sigma_mult):
+    rng = np.random.default_rng(seed)
+    n = 96
+    a = (rng.random((n, n)) < 0.08) * rng.standard_normal((n, n))
+    m = F.csr_from_dense(a)
+    s = F.csr_to_sell(m, c=16, sigma=16 * sigma_mult)
+    assert np.allclose(F.sell_to_dense(s), a, atol=1e-12)
+
+
+@pytest.mark.parametrize("name", list(M.TEST_MATRICES))
+def test_generators_match_published_stats(name):
+    m = M.make_test_matrix(name, scale=0.01 if name in ("HMEp", "sAMG", "UHBR")
+                           else 0.05)
+    published = M._PUBLISHED[name]["n_nzr"]
+    assert 0.4 * published <= m.n_nzr <= 1.8 * published
+    # paper Table 1: pJDS saves memory on every test matrix
+    red = F.data_reduction_vs_ellpack(m, b_r=32)
+    assert red >= 0.0
+
+
+def test_dlr2_has_dense_blocks():
+    m = M.dlr2(scale=0.05)
+    d = F.csr_to_dense(m)
+    # sample some 5x5 blocks: a block containing a nonzero is mostly dense
+    hits = 0
+    for i in range(0, 200, 5):
+        blk = d[i:i + 5, i:i + 5]
+        if np.count_nonzero(blk) > 0:
+            assert np.count_nonzero(blk) == 25
+            hits += 1
+    assert hits > 0

@@ -1,0 +1,102 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats as F
+from repro.kernels import ops
+
+
+def _mk(rng, n, density, dtype, b_r, diag_align=8):
+    a = ((rng.random((n, n)) < density) * rng.standard_normal((n, n))).astype(dtype)
+    m = F.csr_from_dense(a)
+    return a, m
+
+
+SWEEP = [
+    (128, 0.02, np.float32, 32, 8),
+    (256, 0.05, np.float32, 128, 8),
+    (256, 0.05, np.float64, 64, 8),
+    (384, 0.10, np.float32, 32, 16),
+    (130, 0.08, np.float32, 32, 8),   # n not multiple of b_r
+]
+
+
+@pytest.mark.parametrize("n,density,dtype,b_r,diag_align", SWEEP)
+def test_pjds_spmv_kernel_vs_ref(rng, n, density, dtype, b_r, diag_align):
+    a, m = _mk(rng, n, density, dtype, b_r)
+    p = F.csr_to_pjds(m, b_r=b_r, diag_align=diag_align)
+    dev = ops.to_device_pjds(p, chunk_l=8)
+    x = rng.standard_normal(n).astype(dtype)
+    xp = jnp.asarray(p.permute(x))
+    y_ref = np.asarray(ops.pjds_matvec(dev, xp, backend="ref"))
+    y_ker = np.asarray(ops.pjds_matvec(dev, xp, backend="kernel"))
+    np.testing.assert_allclose(y_ker, y_ref, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(p.unpermute(y_ref.astype(np.float64)),
+                               a.astype(np.float64) @ x, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,density,dtype,b_r,diag_align", SWEEP[:3])
+def test_ellr_spmv_kernel_vs_ref(rng, n, density, dtype, b_r, diag_align):
+    a, m = _mk(rng, n, density, dtype, b_r)
+    e = F.csr_to_ell(m, row_align=128, diag_align=8)
+    dev = ops.to_device_ell(e, chunk_l=8, tile_r=128)
+    x = np.zeros(e.n_rows_pad, dtype)
+    x[:n] = rng.standard_normal(n).astype(dtype)
+    y_ref = np.asarray(ops.ell_matvec(dev, jnp.asarray(x), backend="ref"))
+    y_ker = np.asarray(ops.ell_matvec(dev, jnp.asarray(x), backend="kernel"))
+    np.testing.assert_allclose(y_ker, y_ref, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(y_ref[:n].astype(np.float64),
+                               a.astype(np.float64) @ x[:n], atol=1e-3)
+
+
+@pytest.mark.parametrize("n_rhs", [128, 256])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_pjds_spmm_kernel_vs_ref(rng, n_rhs, dtype):
+    a, m = _mk(rng, 192, 0.05, dtype, 64)
+    p = F.csr_to_pjds(m, b_r=64)
+    dev = ops.to_device_pjds(p)
+    x = rng.standard_normal((p.n_rows_pad, n_rhs)).astype(dtype)
+    y_ref = np.asarray(ops.pjds_matmat(dev, jnp.asarray(x), backend="ref"))
+    y_ker = np.asarray(ops.pjds_matmat(dev, jnp.asarray(x), backend="kernel"))
+    np.testing.assert_allclose(y_ker, y_ref, atol=1e-4, rtol=1e-4)
+
+
+def test_bf16_accumulates_f32(rng):
+    a, m = _mk(rng, 128, 0.1, np.float32, 32)
+    p = F.csr_to_pjds(m, b_r=32)
+    dev = ops.to_device_pjds(p, dtype=jnp.bfloat16)
+    x = jnp.asarray(p.permute(rng.standard_normal(128).astype(np.float32))
+                    ).astype(jnp.bfloat16)
+    y_ref = ops.pjds_matvec(dev, x, backend="ref")
+    y_ker = ops.pjds_matvec(dev, x, backend="kernel")
+    assert y_ref.dtype == jnp.float32
+    assert y_ker.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               atol=1e-2, rtol=1e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), n=st.sampled_from([64, 96, 160]),
+       density=st.floats(0.02, 0.3))
+def test_pjds_kernel_property(seed, n, density):
+    rng = np.random.default_rng(seed)
+    a = ((rng.random((n, n)) < density) * rng.standard_normal((n, n))
+         ).astype(np.float32)
+    m = F.csr_from_dense(a)
+    p = F.csr_to_pjds(m, b_r=32)
+    dev = ops.to_device_pjds(p)
+    x = rng.standard_normal(n).astype(np.float32)
+    xp = jnp.asarray(p.permute(x))
+    y_ker = np.asarray(ops.pjds_matvec(dev, xp, backend="kernel"))
+    truth = a.astype(np.float64) @ x
+    np.testing.assert_allclose(p.unpermute(y_ker.astype(np.float64)), truth,
+                               atol=1e-3)
+
+
+def test_chunk_l_mismatch_raises(rng):
+    _, m = _mk(rng, 64, 0.1, np.float32, 32)
+    p = F.csr_to_pjds(m, b_r=32, diag_align=8)
+    with pytest.raises(ValueError):
+        ops.to_device_pjds(p, chunk_l=16)  # 16 doesn't divide blocks of 8

@@ -1,0 +1,75 @@
+"""Optimizer, schedules, ZeRO-1 spec logic, train loop + resume."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.train.optimizer import AdamW, global_norm, zero1_axis
+from repro.train.schedules import wsd, cosine, constant
+
+
+def test_adamw_reduces_quadratic():
+    opt = AdamW(lr_fn=constant(0.1), weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, info = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+    assert int(state.step) == 200
+
+
+def test_grad_clip():
+    opt = AdamW(lr_fn=constant(0.1), grad_clip=1.0)
+    g = {"w": jnp.full((100,), 10.0)}
+    assert float(global_norm(g)) > 1.0
+    p = {"w": jnp.zeros((100,))}
+    s = opt.init(p)
+    _, _, info = opt.update(g, s, p)
+    assert float(info["grad_norm"]) == pytest.approx(100.0, rel=1e-3)
+
+
+def test_master_weights_float32():
+    opt = AdamW(lr_fn=constant(1e-2))
+    params = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    state = opt.init(params)
+    assert state.master["w"].dtype == jnp.float32
+    new_p, new_s, _ = opt.update({"w": jnp.ones((4,), jnp.bfloat16)},
+                                 state, params)
+    assert new_p["w"].dtype == jnp.bfloat16
+    assert new_s.master["w"].dtype == jnp.float32
+
+
+def test_wsd_schedule_phases():
+    fn = wsd(1.0, warmup=10, stable=20, decay=10, final_frac=0.1)
+    assert float(fn(jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(fn(jnp.asarray(15))) == pytest.approx(1.0)
+    assert float(fn(jnp.asarray(29))) == pytest.approx(1.0)
+    assert float(fn(jnp.asarray(40))) == pytest.approx(0.1, rel=1e-3)
+
+
+def test_cosine_schedule():
+    fn = cosine(1.0, warmup=10, total=110, final_frac=0.0)
+    assert float(fn(jnp.asarray(10))) == pytest.approx(1.0, rel=1e-2)
+    assert float(fn(jnp.asarray(110))) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_zero1_axis_picks_largest_free_dim():
+    axes = zero1_axis((1024, 512), ("model", None), ["data"],
+                      {"data": 16, "model": 16})
+    # dim0 taken by model -> dim1 gets data
+    assert axes == ("model", ("data",))
+    axes2 = zero1_axis((8,), (None,), ["data"], {"data": 16})
+    assert axes2 == (None,)      # too small / not divisible -> replicated
+    axes3 = zero1_axis((4096, 32), (None, None), ["pod", "data"],
+                       {"pod": 2, "data": 16, "model": 16})
+    assert axes3 == (("pod", "data"), None)
+
+
+def test_watchdog_flags_stragglers():
+    from repro.train.loop import Watchdog
+    wd = Watchdog(straggler_factor=3.0)
+    for i in range(10):
+        wd.record(i, 0.1)
+    assert wd.record(10, 1.0)            # 10x median -> straggler
+    assert len(wd.stragglers) == 1
