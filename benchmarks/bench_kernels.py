@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.core import formats as F, matrices as M, perf_model as PM
 from repro.kernels import ops
-from .common import time_fn, csv_row
+from .common import time_fn, csv_row, write_bench_json
 
 
 def run(print_rows=True):
@@ -80,6 +80,33 @@ def run(print_rows=True):
     if print_rows:
         print(csv_row("pjds_vs_ellr_samg", t_p * 1e6,
                       f"speedup={t_e/t_p:.2f}x stored_ratio={stored_ratio:.2f}x"))
+
+    # --- SELL-C-sigma vs pJDS storage on the power-law matrix ----------
+    # pJDS is SELL's sigma = n_rows special case, so the best swept SELL
+    # overhead is structurally <= pJDS; the interesting number is how
+    # small a window already gets close (bench_sell.py has the full sweep).
+    mp = M.power_law(4096, seed=7)
+    b_r = 128
+    pj_p = F.csr_to_pjds(mp, b_r=b_r, permuted_cols=False)
+    over_pjds = F.storage_elements(pj_p) / mp.nnz - 1
+    n_pad = pj_p.n_rows_pad
+    best_sigma, best_over = None, np.inf
+    for sigma in (b_r, 4 * b_r, n_pad):
+        sl = F.csr_to_sell(mp, c=b_r, sigma=sigma, permuted_cols=False)
+        over = F.storage_elements(sl) / mp.nnz - 1
+        rows.append(dict(kind="sell_powerlaw_storage", sigma=sigma,
+                         overhead=over))
+        if over < best_over:
+            best_sigma, best_over = sigma, over
+    rows.append(dict(kind="sell_vs_pjds_powerlaw", pjds_overhead=over_pjds,
+                     sell_overhead_best=best_over, sell_sigma_best=best_sigma,
+                     sell_le_pjds=bool(best_over <= over_pjds)))
+    if print_rows:
+        print(csv_row("sell_vs_pjds_powerlaw", 0.0,
+                      f"pjds_overhead={100*over_pjds:.2f}% "
+                      f"sell_best={100*best_over:.2f}%@sigma={best_sigma}"))
+
+    write_bench_json("kernels", rows)
     return rows
 
 

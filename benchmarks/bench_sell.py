@@ -1,0 +1,63 @@
+"""SELL-C-sigma sigma-sweep vs pJDS: the window trade-off, measured.
+
+For each test matrix, sweeps sigma in {b_r, 4*b_r, n_rows} (the last is
+the pJDS special case) and records
+
+* storage overhead vs nnz — padding grows as the window shrinks,
+* unpermute locality — max |inv_perm[i] - i|, bounded by sigma; this is
+  the gather radius of the kernel's fused epilogue (global for pJDS),
+* jitted ref-path wall time (the Pallas kernels run interpret-mode on
+  CPU, so kernel wall-time is not meaningful here — see DESIGN.md §3 for
+  what transfers to TPU),
+* what ``select_format`` would pick for the matrix.
+
+Emits machine-readable BENCH_sell.json for the perf trajectory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats as F, matrices as M
+from repro.kernels import ops
+from .common import time_fn, csv_row, write_bench_json
+
+B_R = 128
+
+
+def _sweep(name: str, m, rows, print_rows: bool) -> None:
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(m.shape[1]).astype(np.float32))
+    n_pad = ((m.n_rows + B_R - 1) // B_R) * B_R
+    chosen = ops.select_format(m, b_r=B_R)
+    for sigma in (B_R, 4 * B_R, n_pad):
+        s = F.csr_to_sell(m, c=B_R, sigma=sigma, permuted_cols=False)
+        dev = ops.to_device_sell(s)
+        over = F.storage_elements(s) / m.nnz - 1
+        locality = int(np.abs(np.asarray(s.pjds.inv_perm)
+                              - np.arange(s.pjds.n_rows_pad)).max())
+        f = jax.jit(lambda v: ops.sell_matvec(dev, v))
+        t = time_fn(f, x)
+        tag = "pjds" if sigma >= n_pad else str(sigma)
+        rows.append(dict(kind="sell_sweep", matrix=name, sigma=sigma,
+                         is_pjds=sigma >= n_pad, overhead=over,
+                         unpermute_radius=locality, t_us=t * 1e6,
+                         gfs=2 * m.nnz / t / 1e9, auto_format=chosen))
+        if print_rows:
+            print(csv_row(f"sell_{name}_sigma{tag}", t * 1e6,
+                          f"overhead={100*over:.2f}% radius={locality} "
+                          f"auto={chosen}"))
+
+
+def run(print_rows=True):
+    rows = []
+    _sweep("powerlaw", M.power_law(4096, seed=7), rows, print_rows)
+    _sweep("sAMG", M.samg(scale=0.004), rows, print_rows)
+    _sweep("UHBR", M.uhbr(scale=0.003), rows, print_rows)
+    write_bench_json("sell", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

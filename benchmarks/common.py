@@ -1,6 +1,8 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
@@ -21,3 +23,22 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def _jsonable(o):
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(f"not JSON-serializable: {type(o)}")
+
+
+def write_bench_json(suite: str, rows: list, out_dir: str | None = None) -> str:
+    """Write machine-readable benchmark rows to ``BENCH_<suite>.json``
+    (cwd by default) — the perf-trajectory artifact CI uploads."""
+    path = pathlib.Path(out_dir or ".") / f"BENCH_{suite}.json"
+    payload = {"suite": suite, "jax": jax.__version__, "rows": rows}
+    path.write_text(json.dumps(payload, indent=2, default=_jsonable) + "\n")
+    return str(path)

@@ -15,20 +15,27 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: table1,fig3,eq,scaling,kernels")
+                    help="comma list: table1,fig3,eq,scaling,kernels,sell")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from . import (bench_formats, bench_histograms, bench_perf_model,
-                   bench_scaling, bench_kernels, bench_sparse_ffn)
+                   bench_scaling, bench_kernels, bench_sell, bench_sparse_ffn)
     suites = [
         ("table1", bench_formats.run),      # paper Table 1
         ("fig3", bench_histograms.run),     # paper Fig. 3
         ("eq", bench_perf_model.run),       # paper Eq. 1-4
         ("kernels", bench_kernels.run),     # kernel study
+        ("sell", bench_sell.run),           # SELL-C-sigma sigma sweep
         ("sparse_ffn", bench_sparse_ffn.run),  # beyond-paper: pJDS in LMs
         ("scaling", bench_scaling.run),     # paper Fig. 5
     ]
+    if only:
+        unknown = only - {name for name, _ in suites}
+        if unknown:
+            sys.exit(f"unknown suite(s): {','.join(sorted(unknown))}; "
+                     f"known: {','.join(name for name, _ in suites)}")
+
     print("name,us_per_call,derived")
     failed = 0
     for name, fn in suites:

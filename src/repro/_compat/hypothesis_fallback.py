@@ -1,0 +1,127 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The container the tier-1 suite runs in may not ship ``hypothesis`` (CI
+installs the real thing — see .github/workflows/ci.yml).  Rather than
+skipping the property tests, this module implements the tiny slice of
+the hypothesis API the suite uses — ``given``, ``settings`` and the
+``integers`` / ``floats`` / ``sampled_from`` / ``booleans`` strategies —
+with deterministic pseudo-random example generation seeded from the test
+name.  Every property test still executes ``max_examples`` drawn
+examples; what is lost vs real hypothesis is only shrinking and the
+example database.
+
+``tests/conftest.py`` calls :func:`install` before collection when the
+real package is missing; test modules keep their plain
+``from hypothesis import given, settings, strategies as st`` imports.
+"""
+from __future__ import annotations
+
+import sys
+import types
+import zlib
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw, label):
+        self._draw = draw
+        self._label = label
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        return f"_Strategy({self._label})"
+
+
+def integers(min_value, max_value):
+    return _Strategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)),
+        f"integers({min_value}, {max_value})",
+    )
+
+
+def floats(min_value, max_value, **_kw):
+    return _Strategy(
+        lambda rng: float(rng.uniform(min_value, max_value)),
+        f"floats({min_value}, {max_value})",
+    )
+
+
+def sampled_from(elements):
+    elems = list(elements)
+    return _Strategy(
+        lambda rng: elems[int(rng.integers(0, len(elems)))],
+        f"sampled_from({elems!r})",
+    )
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)), "booleans()")
+
+
+def given(**strategies):
+    """Decorator: run the test once per drawn example (kwargs style only)."""
+
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_hf_max_examples", _DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            rng = np.random.default_rng(seed)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:  # re-raise with the failing example
+                    raise AssertionError(
+                        f"falsifying example (hypothesis fallback): {drawn}"
+                    ) from e
+
+        # No functools.wraps: __wrapped__ would make pytest resolve the
+        # drawn argument names as fixtures.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._hf_inner = fn
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._hf_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+class HealthCheck:  # pragma: no cover - parity with the real API surface
+    all = staticmethod(lambda: [])
+    too_slow = "too_slow"
+
+
+def install():
+    """Register this module as ``hypothesis`` if the real one is absent."""
+    if "hypothesis" in sys.modules:
+        return
+    try:
+        import hypothesis  # noqa: F401
+        return
+    except ModuleNotFoundError:
+        pass
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for f in (integers, floats, sampled_from, booleans):
+        setattr(st, f.__name__, f)
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st
+    mod.HealthCheck = HealthCheck
+    mod.__is_fallback__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

@@ -9,13 +9,15 @@ Each device's rows are split into
 * ``A_rem`` — entries pointing into other devices' slices (the paper's
   "non-local" part; its columns define the halo).
 
-Both parts are stored in (device-locally sorted) pJDS — going one step
-beyond the paper, whose multi-GPU code still used ELLPACK-R and left
-"an implementation of the pJDS format in the multi-GPU code" as future
-work (paper §3, Conclusions).  The row sort is LOCAL to each device
-(a SELL-style sigma = rows-per-device window), so no global permutation
-crosses the network; the local inverse permutation is applied to y after
-the kernels.
+Both parts are stored in SELL-C-sigma-windowed blocked storage — going
+one step beyond the paper, whose multi-GPU code still used ELLPACK-R and
+left "an implementation of the pJDS format in the multi-GPU code" as
+future work (paper §3, Conclusions).  The row sort is windowed INSIDE
+each device (sigma rows per window, default 8*b_r; ``sigma >= n_loc``
+recovers the device-local global sort, i.e. per-device pJDS), so no
+permutation crosses the network, the inverse permutation applied to y
+after the kernels is window-local, and the halo/RHS access pattern keeps
+the locality of the original row ordering up to sigma (DESIGN.md §3/§6).
 
 The halo moves with ``lax.ppermute`` ring shifts of the x slice — the
 JAX-native form of the paper's "local gather + point-to-point" step.  The
@@ -51,6 +53,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import formats as F
+from repro._compat import shard_map
 from repro.kernels import ops
 
 Mode = Literal["vector", "naive", "overlap"]
@@ -80,6 +83,7 @@ class DistPJDS:
     chunk_l: int = dataclasses.field(metadata=dict(static=True))
     halo_w: int = dataclasses.field(metadata=dict(static=True))
     n_rows: int = dataclasses.field(metadata=dict(static=True))  # unpadded
+    sigma: int = dataclasses.field(metadata=dict(static=True))   # sort window
 
     @property
     def n_global_pad(self) -> int:
@@ -139,12 +143,17 @@ def partition_csr(
     diag_align: int = 8,
     chunk_l: int = 8,
     halo_w: int | None = None,
+    sigma: int | None = None,
 ) -> DistPJDS:
     """Row-partition a global CSR onto ``n_dev`` devices as :class:`DistPJDS`.
 
     ``halo_w`` is measured from the matrix when not given; a matrix whose
     halo window reaches n_dev//2 effectively all-gathers — the pattern the
     paper's model flags as not multi-accelerator-friendly.
+
+    ``sigma`` bounds the per-device row-sort window (SELL-C-sigma style;
+    default 8*b_r).  ``sigma >= n_loc`` recovers the device-local global
+    sort, i.e. per-device pJDS.
     """
     if m.shape[0] != m.shape[1]:
         raise ValueError("distributed spMVM expects a square matrix")
@@ -166,14 +175,19 @@ def partition_csr(
     if halo_w > n_dev // 2 and n_dev > 1:
         halo_w = max(n_dev // 2, 1)
 
+    sig = min(int(sigma) if sigma is not None else 8 * b_r, n_loc)
+    sig = max(sig, 1)
+
     locs, rems, invs = [], [], []
     for p in range(n_dev):
         sl = _csr_row_slice(m, p * n_loc, (p + 1) * n_loc, n_loc)
         loc, rem = _split_loc_rem(sl, p, n_loc, n_dev, halo_w)
-        # One shared device-local row sort (by TOTAL row length) so the two
-        # partial results add in the same permuted order.
+        # One shared per-device row sort (by TOTAL row length) so the two
+        # partial results add in the same permuted order — windowed to
+        # sigma rows (SELL-C-sigma) so the inverse permutation applied to
+        # y stays window-local.
         total_rl = loc.row_lengths() + rem.row_lengths()
-        perm = np.argsort(-total_rl.astype(np.int64), kind="stable").astype(np.int32)
+        perm = F.windowed_sort_perm(total_rl, sig)
         pj_loc = F._pjds_with_perm(loc, perm, b_r, diag_align, False)
         pj_rem = F._pjds_with_perm(rem, perm, b_r, diag_align, False)
         locs.append(ops.to_device_pjds(pj_loc, chunk_l))
@@ -209,6 +223,7 @@ def partition_csr(
         chunk_l=chunk_l,
         halo_w=halo_w,
         n_rows=m.n_rows,
+        sigma=sig,
     )
 
 
@@ -290,7 +305,7 @@ def make_dist_matvec(dist: DistPJDS, mesh: Mesh, axis: str = "data",
     )
 
     @functools.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(operand_specs, P(axis)),
         out_specs=P(axis),

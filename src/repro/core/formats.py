@@ -53,6 +53,9 @@ __all__ = [
     "format_nbytes",
     "storage_elements",
     "data_reduction_vs_ellpack",
+    "windowed_sort_perm",
+    "windowed_block_lengths",
+    "estimate_storage_elements",
 ]
 
 _DEFAULT_BR = 128          # rows per pJDS block (lane dimension on TPU)
@@ -352,6 +355,23 @@ class SELLMatrix:
     sigma: int
 
 
+def windowed_sort_perm(rowlen: np.ndarray, sigma: int) -> np.ndarray:
+    """Permutation sorting rows by DESCENDING length inside each window
+    of ``sigma`` rows (stable within the window) — the SELL-C-sigma sort
+    step, shared by the converter, the storage estimator, and the
+    distributed partitioner so their padding always agrees.
+    ``perm[p]`` = original row at sorted position ``p``;
+    ``|perm[p] - p| < sigma`` for every entry."""
+    rl = np.asarray(rowlen, dtype=np.int64)
+    n = len(rl)
+    perm = np.arange(n, dtype=np.int32)
+    for w in range(0, n, sigma):
+        hi = min(w + sigma, n)
+        sub = np.argsort(-rl[w:hi], kind="stable")
+        perm[w:hi] = (w + sub).astype(np.int32)
+    return perm
+
+
 def csr_to_sell(
     m: CSRMatrix,
     c: int = _DEFAULT_BR,
@@ -365,11 +385,7 @@ def csr_to_sell(
     n_pad = _pad_to(m.n_rows, c)
     rl_pad = np.zeros(n_pad, dtype=np.int64)
     rl_pad[: m.n_rows] = rl
-    perm = np.arange(n_pad, dtype=np.int32)
-    for w in range(0, n_pad, sigma):
-        hi = min(w + sigma, n_pad)
-        sub = np.argsort(-rl_pad[w:hi], kind="stable")
-        perm[w:hi] = (w + sub).astype(np.int32)
+    perm = windowed_sort_perm(rl_pad, sigma)
     # Reuse the pJDS constructor machinery by faking the sort: build a CSR
     # with rows pre-permuted, convert with an identity-sort guarantee, then
     # compose permutations.
@@ -473,3 +489,56 @@ def data_reduction_vs_ellpack(m: CSRMatrix, b_r: int = _DEFAULT_BR) -> float:
     ell = csr_to_ell(m, row_align=b_r)
     pj = csr_to_pjds(m, b_r=b_r, permuted_cols=(m.shape[0] == m.shape[1]))
     return 1.0 - storage_elements(pj) / storage_elements(ell)
+
+
+# --------------------------------------------------------------------------
+# Storage estimators from row lengths alone (no matrix build).
+# The dispatch layer (kernels.ops.select_format) prices each candidate
+# format with these before converting anything.
+# --------------------------------------------------------------------------
+def windowed_block_lengths(
+    rowlen: np.ndarray,
+    b_r: int = _DEFAULT_BR,
+    diag_align: int = _DEFAULT_DIAG_ALIGN,
+    sigma: int | None = None,
+) -> np.ndarray:
+    """Per-block padded jagged-diagonal counts of a blocked (pJDS / SELL)
+    layout, computed from row lengths alone.  ``sigma=None`` is the global
+    sort (pJDS); ``sigma <= b_r`` degenerates to no sort (sliced ELLPACK).
+    Matches the ``block_len`` the real converters produce."""
+    rl = np.asarray(rowlen, dtype=np.int64)
+    n_pad = _pad_to(max(len(rl), 1), b_r)
+    rl_pad = np.zeros(n_pad, dtype=np.int64)
+    rl_pad[: len(rl)] = rl
+    if sigma is None or sigma >= n_pad:
+        srt = -np.sort(-rl_pad)
+    else:
+        srt = rl_pad[windowed_sort_perm(rl_pad, sigma)]
+    blk_max = srt.reshape(-1, b_r).max(axis=1)
+    return np.array(
+        [_pad_to(max(int(b), 1), diag_align) for b in blk_max], dtype=np.int32
+    )
+
+
+def estimate_storage_elements(
+    rowlen: np.ndarray,
+    fmt: str,
+    b_r: int = _DEFAULT_BR,
+    diag_align: int = _DEFAULT_DIAG_ALIGN,
+    sigma: int | None = None,
+) -> int:
+    """Stored value elements (incl. padding) a format WOULD use, from row
+    lengths alone.  Agrees with ``storage_elements`` on the built matrix."""
+    rl = np.asarray(rowlen, dtype=np.int64)
+    if fmt == "csr":
+        return int(rl.sum())
+    if fmt in ("ellpack", "ellpack_r"):
+        n_pad = _pad_to(max(len(rl), 1), b_r)
+        return n_pad * _pad_to(max(int(rl.max(initial=0)), 1), diag_align)
+    if fmt == "pjds":
+        return int(windowed_block_lengths(rl, b_r, diag_align, None).sum()) * b_r
+    if fmt == "sell":
+        if sigma is None:
+            sigma = 8 * b_r
+        return int(windowed_block_lengths(rl, b_r, diag_align, sigma).sum()) * b_r
+    raise ValueError(f"unknown format {fmt!r}")

@@ -27,6 +27,7 @@ __all__ = [
     "TEST_MATRICES",
     "make_test_matrix",
     "poisson_2d",
+    "power_law",
 ]
 
 # Published statistics (paper §1.3) — dimension, avg nnz/row.
@@ -159,6 +160,23 @@ def _spd_shift(m: CSRMatrix) -> CSRMatrix:
     rows = np.concatenate([np.repeat(np.arange(n), rl), diag_rows])
     cols = np.concatenate([m.indices, diag_rows])
     vals = np.concatenate([m.data, np.full(n, shift, dtype=m.data.dtype)])
+    return csr_from_coo(rows, cols, vals, (n, n))
+
+
+def power_law(n: int = 4096, seed: int = 7, exponent: float = 1.6,
+              min_rl: int = 2) -> CSRMatrix:
+    """Zipf-distributed row lengths — the extreme row-length-variance
+    case (scale-free graphs, web/social adjacency) where the formats
+    diverge most: ELLPACK pads every row to the rare hub length, pJDS
+    needs a global sort to avoid that, SELL-C-sigma bounds the sort.
+    The format-dispatch benchmarks and tests use this as the worst-case
+    pattern alongside the paper's five matrices."""
+    rng = np.random.default_rng(seed)
+    rl = np.clip(rng.zipf(exponent, size=n) + min_rl - 1, min_rl, n // 4)
+    tot = int(rl.sum())
+    rows = np.repeat(np.arange(n), rl)
+    cols = rng.integers(0, n, size=tot)
+    vals = rng.standard_normal(tot)
     return csr_from_coo(rows, cols, vals, (n, n))
 
 

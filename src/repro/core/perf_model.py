@@ -33,6 +33,8 @@ __all__ = [
     "n_nzr_lower_for_link_penalty",
     "spmvm_flops",
     "spmvm_bytes",
+    "perm_traffic_bytes",
+    "predicted_spmv_seconds",
     "roofline_terms",
     "RooflineReport",
 ]
@@ -124,6 +126,38 @@ def spmvm_bytes(stored_elements: int, n_rows: int, alpha: float,
         + alpha * n_nzr * n_rows * value_bytes
         + 2 * n_rows * value_bytes
     )
+
+
+def perm_traffic_bytes(n_rows: int, value_bytes: int = 4,
+                       index_bytes: int = 4,
+                       window_local: bool = False) -> float:
+    """Extra HBM traffic of undoing a row sort OUTSIDE the kernel: the
+    permutation index stream plus a read+write pass over y.  A
+    window-local (SELL-C-sigma) unpermute is fused into the kernel while
+    y is still VMEM-resident, so it costs no HBM traffic at all — the
+    structural advantage dispatch weighs against pJDS's (slightly)
+    smaller padding (DESIGN.md §5)."""
+    if window_local:
+        return 0.0
+    return float(n_rows) * (2 * value_bytes + index_bytes)
+
+
+def predicted_spmv_seconds(stored_elements: int, n_rows: int, n_nzr: float,
+                           perm_bytes: float = 0.0,
+                           irregular_factor: float = 1.0,
+                           spec: TPUSpec = TPU_V5E,
+                           value_bytes: int = 4,
+                           index_bytes: int = 4) -> float:
+    """Memory-bound time estimate of one spMVM in a candidate format —
+    the quantity ``kernels.ops.select_format`` minimises.  Uses the
+    enforced alpha -> 1/N_nzr limit (VMEM-resident RHS, DESIGN.md §2);
+    ``irregular_factor`` derates formats without a blocked kernel (CSR's
+    scalar gather stream cannot saturate HBM)."""
+    n_nzr = max(n_nzr, 1e-9)
+    alpha = 1.0 / n_nzr
+    b = spmvm_bytes(stored_elements, n_rows, alpha, n_nzr,
+                    value_bytes, index_bytes)
+    return (b * irregular_factor + perm_bytes) / spec.hbm_bw
 
 
 @dataclasses.dataclass

@@ -1,38 +1,67 @@
-"""jit'd public wrappers around the Pallas kernels + device containers.
+"""jit'd public wrappers around the Pallas kernels + the unified
+dispatch layer.
 
-``to_device_pjds`` / ``to_device_ell`` move a host-side format
-(``repro.core.formats``) onto the device with the kernel-side metadata
-(chunk maps, tile chunk counts) precomputed.  ``pjds_matvec`` /
-``ell_matvec`` / ``pjds_matmat`` dispatch to either the Pallas kernel
-(``backend='kernel'``, interpret-mode on CPU) or the pure-jnp oracle
-(``backend='ref'``, fast on CPU and used inside the distributed layer).
+Two levels of API live here:
+
+* **Per-format containers and matvecs** — ``to_device_pjds`` /
+  ``to_device_ell`` / ``to_device_sell`` / ``to_device_csr`` move a
+  host-side format (``repro.core.formats``) onto the device with the
+  kernel-side metadata (chunk maps, tile chunk counts, window inverse
+  permutations) precomputed; ``pjds_matvec`` / ``ell_matvec`` /
+  ``sell_matvec`` / ``csr_matvec`` / ``pjds_matmat`` dispatch to either
+  the Pallas kernel (``backend='kernel'``, interpret-mode on CPU) or the
+  pure-jnp oracle (``backend='ref'``, fast on CPU and used inside the
+  distributed layer).
+
+* **The unified entry point** — ``spmv(a, x, format="auto")`` wraps any
+  matrix in a :class:`SparseDevice`: it inspects row-length statistics,
+  prices each candidate format with ``core.perf_model``'s overhead
+  estimates (``select_format``), converts once, caches the device
+  representation, and computes y = A x in the ORIGINAL basis regardless
+  of which format won.  Callers never touch permutations or padding.
+  See DESIGN.md §5 for the selection heuristic.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal
+import weakref
+from typing import Literal, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import formats as F
+from repro.core import perf_model as PM
 from . import ref as R
 from .pjds_spmv import pjds_matvec_kernel_call
 from .pjds_spmm import pjds_matmat_kernel_call
 from .ellr_spmv import ell_matvec_kernel_call
+from .sell_spmv import sell_matvec_kernel_call
 
 __all__ = [
     "PJDSDevice",
     "ELLDevice",
+    "SELLDevice",
+    "CSRDevice",
+    "SparseDevice",
     "to_device_pjds",
     "to_device_ell",
+    "to_device_sell",
+    "to_device_csr",
     "pjds_matvec",
     "pjds_matmat",
     "ell_matvec",
+    "sell_matvec",
+    "csr_matvec",
+    "select_format",
+    "as_device",
+    "spmv",
+    "clear_device_cache",
 ]
 
 Backend = Literal["kernel", "ref"]
+FormatName = Literal["auto", "csr", "ellpack_r", "pjds", "sell"]
 
 
 @jax.tree_util.register_dataclass
@@ -65,6 +94,44 @@ class ELLDevice:
     tile_r: int = dataclasses.field(metadata=dict(static=True))
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SELLDevice:
+    """Device-resident SELL-C-sigma operand: pJDS chunk layout plus the
+    window-local inverse permutation the kernel fuses into its epilogue."""
+
+    val: jax.Array                     # (total_jds, b_r)
+    col_idx: jax.Array                 # (total_jds, b_r) int32
+    chunk_map: jax.Array               # (total_jds // chunk_l,) int32
+    row_block: jax.Array               # (total_jds,) int32 (for the ref)
+    inv_perm: jax.Array                # (n_blocks * b_r,) int32, window-local
+    n_blocks: int = dataclasses.field(metadata=dict(static=True))
+    b_r: int = dataclasses.field(metadata=dict(static=True))
+    chunk_l: int = dataclasses.field(metadata=dict(static=True))
+    sigma: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_rows_pad(self) -> int:
+        return self.n_blocks * self.b_r
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CSRDevice:
+    """Device-resident CSR as flat nnz streams (gather + segment-sum ref;
+    no Pallas kernel — the irregular baseline for tiny matrices)."""
+
+    data: jax.Array                    # (nnz,)
+    indices: jax.Array                 # (nnz,) int32
+    row_ids: jax.Array                 # (nnz,) int32
+    n_rows: int = dataclasses.field(metadata=dict(static=True))
+
+
+def _blocked_maps(block_len: np.ndarray, chunk_l: int, n_blocks: int):
+    row_block = np.repeat(np.arange(n_blocks, dtype=np.int32), block_len)
+    return row_block, row_block[::chunk_l].copy()
+
+
 def to_device_pjds(p: F.PJDSMatrix, chunk_l: int = 8,
                    dtype=None) -> PJDSDevice:
     if np.any(p.block_len % chunk_l):
@@ -73,10 +140,7 @@ def to_device_pjds(p: F.PJDSMatrix, chunk_l: int = 8,
             f"pJDS matrix with diag_align a multiple of chunk_l"
         )
     # block id per jagged-diagonal row, then per chunk
-    row_block = np.repeat(
-        np.arange(p.n_blocks, dtype=np.int32), p.block_len
-    )
-    chunk_map = row_block[::chunk_l].copy()
+    row_block, chunk_map = _blocked_maps(p.block_len, chunk_l, p.n_blocks)
     val = p.val if dtype is None else p.val.astype(dtype)
     return PJDSDevice(
         val=jnp.asarray(val),
@@ -104,6 +168,41 @@ def to_device_ell(e: F.ELLMatrix, chunk_l: int = 8, tile_r: int = 128,
         tile_chunks=jnp.asarray(tile_chunks),
         chunk_l=chunk_l,
         tile_r=tile_r,
+    )
+
+
+def to_device_sell(s: F.SELLMatrix, chunk_l: int = 8,
+                   dtype=None) -> SELLDevice:
+    p = s.pjds
+    if np.any(p.block_len % chunk_l):
+        raise ValueError(
+            f"chunk_l={chunk_l} must divide every chunk length; rebuild the "
+            f"SELL matrix with diag_align a multiple of chunk_l"
+        )
+    row_block, chunk_map = _blocked_maps(p.block_len, chunk_l, p.n_blocks)
+    val = p.val if dtype is None else p.val.astype(dtype)
+    return SELLDevice(
+        val=jnp.asarray(val),
+        col_idx=jnp.asarray(p.col_idx),
+        chunk_map=jnp.asarray(chunk_map),
+        row_block=jnp.asarray(row_block),
+        inv_perm=jnp.asarray(p.inv_perm),
+        n_blocks=p.n_blocks,
+        b_r=p.b_r,
+        chunk_l=chunk_l,
+        sigma=s.sigma,
+    )
+
+
+def to_device_csr(m: F.CSRMatrix, dtype=None) -> CSRDevice:
+    data = m.data if dtype is None else m.data.astype(dtype)
+    row_ids = np.repeat(np.arange(m.n_rows, dtype=np.int32),
+                        m.row_lengths())
+    return CSRDevice(
+        data=jnp.asarray(data),
+        indices=jnp.asarray(m.indices),
+        row_ids=jnp.asarray(row_ids),
+        n_rows=m.n_rows,
     )
 
 
@@ -137,3 +236,225 @@ def ell_matvec(a: ELLDevice, x: jax.Array,
             chunk_l=a.chunk_l, tile_r=a.tile_r,
         )
     return R.ell_matvec_ref(a.val, a.col_idx, a.rowlen, x)
+
+
+def sell_matvec(a: SELLDevice, x: jax.Array,
+                backend: Backend = "ref") -> jax.Array:
+    """y = A x with rows back in the ORIGINAL order (the window-local
+    inverse permutation is fused); y has n_rows_pad entries."""
+    if backend == "kernel":
+        return sell_matvec_kernel_call(
+            a.val, a.col_idx, a.chunk_map, a.inv_perm, x,
+            n_blocks=a.n_blocks, chunk_l=a.chunk_l,
+        )
+    return R.sell_matvec_ref(a.val, a.col_idx, a.row_block, a.inv_perm, x,
+                             a.n_blocks)
+
+
+def csr_matvec(a: CSRDevice, x: jax.Array,
+               backend: Backend = "ref") -> jax.Array:
+    # No Pallas kernel for CSR — the ref path IS the implementation.
+    del backend
+    return R.csr_matvec_ref(a.data, a.indices, a.row_ids, x, a.n_rows)
+
+
+# --------------------------------------------------------------------------
+# Unified dispatch: SparseDevice + spmv(a, x, format="auto")
+# --------------------------------------------------------------------------
+_CSR_MIN_ROWS_FACTOR = 2       # below 2*b_r rows, block padding dominates
+_CSR_IRREGULAR_FACTOR = 4.0    # scalar gather stream can't saturate HBM
+_ELL_OVERHEAD_TOL = 0.05       # near-constant rows: skip sorting entirely
+
+
+def select_format(
+    m: F.CSRMatrix,
+    *,
+    b_r: int = 128,
+    diag_align: int = 8,
+    sigma: Optional[int] = None,
+    spec: PM.TPUSpec = PM.TPU_V5E,
+) -> str:
+    """Pick a storage format from row-length statistics alone.
+
+    Deterministic for a fixed matrix: prices each candidate's predicted
+    memory-bound spMVM time (``perf_model.predicted_spmv_seconds``) from
+    its estimated padded storage (``formats.estimate_storage_elements``)
+    plus the HBM cost of any out-of-kernel permutation, then takes the
+    first minimum in the fixed order ellpack_r < sell < pjds.  CSR wins
+    only for degenerate inputs (empty, or too few rows to fill blocks).
+    The full rationale is DESIGN.md §5.
+    """
+    n = m.n_rows
+    if m.nnz == 0 or n < _CSR_MIN_ROWS_FACTOR * b_r:
+        return "csr"
+    rl = m.row_lengths()
+    n_nzr = m.n_nzr
+    if sigma is None:
+        sigma = 8 * b_r
+    vb = m.data.dtype.itemsize
+
+    ell_elems = F.estimate_storage_elements(rl, "ellpack_r", b_r, diag_align)
+    if ell_elems / m.nnz - 1.0 <= _ELL_OVERHEAD_TOL:
+        return "ellpack_r"    # rows (nearly) constant: no sort, no perm
+
+    candidates = {
+        "ellpack_r": PM.predicted_spmv_seconds(
+            ell_elems, n, n_nzr, spec=spec, value_bytes=vb),
+        "sell": PM.predicted_spmv_seconds(
+            F.estimate_storage_elements(rl, "sell", b_r, diag_align, sigma),
+            n, n_nzr,
+            perm_bytes=PM.perm_traffic_bytes(n, vb, window_local=True),
+            spec=spec, value_bytes=vb),
+        "pjds": PM.predicted_spmv_seconds(
+            F.estimate_storage_elements(rl, "pjds", b_r, diag_align),
+            n, n_nzr,
+            perm_bytes=PM.perm_traffic_bytes(n, vb, window_local=False),
+            spec=spec, value_bytes=vb),
+    }
+    return min(candidates, key=candidates.get)
+
+
+@dataclasses.dataclass
+class SparseDevice:
+    """A matrix ready for ``spmv``: one chosen format, converted once.
+
+    Whatever the inner format, ``matvec`` consumes x and returns y in the
+    ORIGINAL basis (length ``shape[0]``) — permutations, padding and
+    basis changes are internal.  Device arrays are cached per host
+    matrix by ``as_device``; hold on to the wrapper (or keep the host
+    matrix alive) to amortise conversion across calls.
+    """
+
+    fmt: str
+    shape: Tuple[int, int]
+    dev: Union[PJDSDevice, ELLDevice, SELLDevice, CSRDevice]
+    inv_perm: Optional[jax.Array]      # pjds only: undo the global row sort
+
+    @property
+    def n_rows(self) -> int:
+        return self.shape[0]
+
+    def matvec(self, x: jax.Array, backend: Backend = "ref") -> jax.Array:
+        """y = A x, original basis, length shape[0]."""
+        if x.shape[-1] < self.shape[1]:
+            # jax clamps out-of-range gathers, which would silently
+            # return garbage instead of failing.
+            raise ValueError(
+                f"x has {x.shape[-1]} entries; matrix has {self.shape[1]} "
+                f"columns")
+        if self.fmt == "csr":
+            return csr_matvec(self.dev, x, backend)
+        if self.fmt == "ellpack_r":
+            return ell_matvec(self.dev, x, backend)[: self.n_rows]
+        if self.fmt == "sell":
+            return sell_matvec(self.dev, x, backend)[: self.n_rows]
+        if self.fmt == "pjds":
+            y_p = pjds_matvec(self.dev, x, backend)
+            return y_p[self.inv_perm][: self.n_rows]
+        raise ValueError(f"unknown format {self.fmt!r}")
+
+    def storage_elements(self) -> int:
+        if self.fmt == "csr":
+            return int(self.dev.data.size)
+        return int(self.dev.val.size)
+
+
+# Conversion cache: host matrix -> device representation.  Keyed by the
+# host object's id and the build parameters; a weakref callback evicts
+# the entry when the host matrix is garbage-collected (id reuse safety),
+# and the stored weakref is re-checked on hit.
+_DEVICE_CACHE: dict = {}
+
+
+def clear_device_cache() -> None:
+    _DEVICE_CACHE.clear()
+
+
+def _cache_put(key, m, dev) -> None:
+    try:
+        ref = weakref.ref(m, lambda _unused, k=key: _DEVICE_CACHE.pop(k, None))
+    except TypeError:            # not weakref-able: skip caching
+        return
+    _DEVICE_CACHE[key] = (ref, dev)
+
+
+def as_device(
+    a: Union[F.CSRMatrix, np.ndarray, SparseDevice],
+    format: FormatName = "auto",
+    *,
+    b_r: int = 128,
+    diag_align: int = 8,
+    sigma: Optional[int] = None,
+    chunk_l: int = 8,
+    dtype=None,
+) -> SparseDevice:
+    """Wrap a matrix as a :class:`SparseDevice`, converting at most once.
+
+    ``a`` may be a host CSRMatrix, a dense ndarray (converted to CSR
+    first — pass CSRMatrix to benefit from caching), or an existing
+    SparseDevice (returned unchanged; ``format`` must agree or be auto).
+    """
+    if isinstance(a, SparseDevice):
+        if format not in ("auto", a.fmt):
+            raise ValueError(
+                f"matrix already converted to {a.fmt!r}; asked for {format!r}")
+        return a
+    if isinstance(a, np.ndarray):
+        a = F.csr_from_dense(a)
+    if not isinstance(a, F.CSRMatrix):
+        raise TypeError(f"cannot dispatch on {type(a)}")
+
+    key = (id(a), format, b_r, diag_align, sigma, chunk_l,
+           np.dtype(dtype).name if dtype is not None else None)
+    hit = _DEVICE_CACHE.get(key)
+    if hit is not None and hit[0]() is a:
+        return hit[1]
+
+    # The kernels need diag_align % chunk_l == 0; raise it once here so
+    # the selection pricing sees the same padding the builders produce.
+    da = max(diag_align, chunk_l)
+
+    fmt = format
+    if fmt == "auto":
+        fmt = select_format(a, b_r=b_r, diag_align=da, sigma=sigma)
+
+    inv_perm = None
+    if fmt == "csr":
+        dev = to_device_csr(a, dtype=dtype)
+    elif fmt == "ellpack_r":
+        e = F.csr_to_ell(a, row_align=b_r, diag_align=da)
+        dev = to_device_ell(e, chunk_l=chunk_l, tile_r=b_r, dtype=dtype)
+    elif fmt == "sell":
+        s = F.csr_to_sell(a, c=b_r, sigma=sigma, diag_align=da,
+                          permuted_cols=False)
+        dev = to_device_sell(s, chunk_l=chunk_l, dtype=dtype)
+    elif fmt == "pjds":
+        p = F.csr_to_pjds(a, b_r=b_r, diag_align=da, permuted_cols=False)
+        dev = to_device_pjds(p, chunk_l=chunk_l, dtype=dtype)
+        inv_perm = jnp.asarray(p.inv_perm)
+    else:
+        raise ValueError(f"unknown format {fmt!r}")
+
+    sd = SparseDevice(fmt=fmt, shape=a.shape, dev=dev, inv_perm=inv_perm)
+    _cache_put(key, a, sd)
+    return sd
+
+
+def spmv(
+    a: Union[F.CSRMatrix, np.ndarray, SparseDevice],
+    x: jax.Array,
+    format: FormatName = "auto",
+    backend: Backend = "ref",
+    **convert_kwargs,
+) -> jax.Array:
+    """y = A x through the unified dispatch layer (original basis).
+
+    ``format="auto"`` measures the matrix and picks CSR-ref / ELLPACK-R /
+    pJDS / SELL-C-sigma (``select_format``); an explicit name forces the
+    format.  The converted device representation is cached, so repeated
+    ``spmv`` calls with the same host matrix convert once.
+    ``convert_kwargs`` (b_r, diag_align, sigma, chunk_l, dtype) pass
+    through to :func:`as_device`.
+    """
+    d = as_device(a, format, **convert_kwargs)
+    return d.matvec(jnp.asarray(x), backend=backend)

@@ -15,7 +15,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["pjds_matvec_ref", "pjds_matmat_ref", "ell_matvec_ref"]
+__all__ = ["pjds_matvec_ref", "pjds_matmat_ref", "ell_matvec_ref",
+           "sell_matvec_ref", "csr_matvec_ref"]
 
 
 def _acc_dtype(*dts):
@@ -49,6 +50,26 @@ def pjds_matmat_ref(val: jax.Array, col_idx: jax.Array, row_block: jax.Array,
     contrib = gathered * val.astype(dt)[..., None]
     y_blk = jax.ops.segment_sum(contrib, row_block, num_segments=n_blocks)
     return y_blk.reshape(n_blocks * b_r, x.shape[1])
+
+
+def sell_matvec_ref(val: jax.Array, col_idx: jax.Array, row_block: jax.Array,
+                    inv_perm: jax.Array, x: jax.Array,
+                    n_blocks: int) -> jax.Array:
+    """SELL-C-sigma y = A x with the window-local unpermute fused: the
+    storage-layout matvec is identical to pJDS, then ``inv_perm`` takes y
+    back to the original row order (y[i] = y_sorted[inv_perm[i]])."""
+    y_sorted = pjds_matvec_ref(val, col_idx, row_block, x, n_blocks)
+    return y_sorted[inv_perm]
+
+
+def csr_matvec_ref(data: jax.Array, indices: jax.Array, row_ids: jax.Array,
+                   x: jax.Array, n_rows: int) -> jax.Array:
+    """CSR y = A x as a flat gather + segment-sum over the nnz stream —
+    the dispatch layer's fallback for matrices too small/empty to be
+    worth a blocked format (no Pallas kernel: the irregular baseline)."""
+    dt = _acc_dtype(data.dtype, x.dtype)
+    contrib = data.astype(dt) * x[indices].astype(dt)
+    return jax.ops.segment_sum(contrib, row_ids, num_segments=n_rows)
 
 
 def ell_matvec_ref(val: jax.Array, col_idx: jax.Array, rowlen: jax.Array,

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel for SELL-C-sigma sparse matrix-vector multiplication.
+
+SELL-C-sigma (Kreutzer et al. 2013, PAPERS.md) is the published successor
+of the paper's pJDS format: rows are sorted by non-zero count only inside
+windows of ``sigma`` rows instead of globally, bounding how far any row
+moves from its original position.  ``sigma = n_rows`` reproduces pJDS,
+``sigma = C`` (= ``b_r`` here) is pure sliced ELLPACK.  See DESIGN.md §3.
+
+The kernel reuses the chunked (chunk_l, b_r) VMEM-tile walk of
+``pjds_spmv.py`` — storage layout is identical — with one structural
+difference: because the row permutation is *window-local*, the inverse
+permutation that takes y back to the original row order is applied
+INSIDE the kernel, fused after the last accumulation step.  Every entry
+of ``inv_perm`` satisfies ``|inv_perm[i] - i| < sigma``, so on hardware
+the final gather touches only a sigma-sized neighbourhood of the
+VMEM-resident accumulator (a pJDS global sort would make this a full
+scatter across all of y — the reason the pJDS kernel leaves the
+unpermute to the caller).
+
+Consequences of the fused unpermute:
+
+* ``sell_matvec`` consumes x and produces y in the ORIGINAL basis when
+  the matrix was built with ``permuted_cols=False`` — no host-side
+  permutation on either side of the call.  This is what the unified
+  dispatch layer (``ops.spmv``) relies on.
+* The RHS gather locality of the original ordering is preserved up to
+  sigma, which is the whole point of bounding the sort window.
+
+VMEM working set per step: 2 tiles * chunk_l * b_r * itemsize
+(+ x + y + inv_perm resident), same as the pJDS kernel plus 4 bytes/row
+for the permutation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["sell_matvec_kernel_call"]
+
+
+def _acc_dtype(*dts):
+    r = jnp.result_type(*dts)
+    if r in (jnp.bfloat16, jnp.float16):
+        return jnp.float32
+    return r
+
+
+def _sell_spmv_kernel(chunk_map_ref, val_ref, col_ref, x_ref, inv_ref, y_ref,
+                      *, n_chunks):
+    g = pl.program_id(0)
+    blk = chunk_map_ref[g]
+
+    # Zero the (fully VMEM-resident) output once, before any accumulation.
+    @pl.when(g == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    x = x_ref[...]
+    idx = col_ref[...]                       # (chunk_l, b_r)
+    gathered = x[idx]                        # VPU dynamic-gather from VMEM
+    dt = y_ref.dtype
+    contrib = val_ref[...].astype(dt) * gathered.astype(dt)
+    y_ref[blk, :] += jnp.sum(contrib, axis=0)
+
+    # Fused window-local unpermute: after the last chunk, take the
+    # window-sorted accumulator back to the original row order.  Each
+    # gather index stays within sigma of its destination.
+    @pl.when(g == n_chunks - 1)
+    def _unpermute():
+        ys = y_ref[...].reshape(-1)
+        y_ref[...] = ys[inv_ref[...]].reshape(y_ref.shape)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_blocks", "chunk_l", "interpret"),
+)
+def sell_matvec_kernel_call(
+    val: jax.Array,
+    col_idx: jax.Array,
+    chunk_map: jax.Array,
+    inv_perm: jax.Array,
+    x: jax.Array,
+    *,
+    n_blocks: int,
+    chunk_l: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """y = A_sell @ x, returned in the ORIGINAL row order.
+
+    ``chunk_l`` must divide every SELL chunk (= pJDS block) length; the
+    ``ops.to_device_sell`` wrapper checks this.
+
+    val/col_idx: (total_jds, b_r) with total_jds % chunk_l == 0.
+    chunk_map:   (total_jds // chunk_l,) int32 row-block id per chunk.
+    inv_perm:    (n_blocks * b_r,) int32, window-local inverse of the
+                 sigma-window row sort: y_out[i] = y_sorted[inv_perm[i]].
+    x:           (n_cols_pad,) RHS.  Original basis when the matrix was
+                 built with permuted_cols=False (the dispatch-layer
+                 default); permuted basis otherwise.
+    Returns y:   (n_blocks * b_r,) in the accumulator dtype.
+    """
+    total_jds, b_r = val.shape
+    if total_jds % chunk_l:
+        raise ValueError(f"total_jds={total_jds} not a multiple of chunk_l={chunk_l}")
+    if inv_perm.shape != (n_blocks * b_r,):
+        raise ValueError(f"inv_perm shape {inv_perm.shape} != ({n_blocks * b_r},)")
+    n_chunks = total_jds // chunk_l
+    dt = _acc_dtype(val.dtype, x.dtype)
+
+    y_blk = pl.pallas_call(
+        functools.partial(_sell_spmv_kernel, n_chunks=n_chunks),
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                # chunk_map
+            pl.BlockSpec((chunk_l, b_r), lambda g: (g, 0)),       # val tile
+            pl.BlockSpec((chunk_l, b_r), lambda g: (g, 0)),       # col tile
+            pl.BlockSpec(x.shape, lambda g: (0,)),                # x resident
+            pl.BlockSpec(inv_perm.shape, lambda g: (0,)),         # inv resident
+        ],
+        out_specs=pl.BlockSpec((n_blocks, b_r), lambda g: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, b_r), dt),
+        interpret=interpret,
+        name="sell_spmv",
+    )(chunk_map, val, col_idx, x, inv_perm)
+    return y_blk.reshape(n_blocks * b_r)

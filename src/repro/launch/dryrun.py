@@ -35,12 +35,13 @@ from repro.train.optimizer import AdamW
 from repro.train.schedules import cosine
 from repro.train.step import (make_train_step, train_state_shardings,
                               specs_to_shardings)
+from repro import _compat as compat
 from repro.launch.mesh import make_production_mesh
 from repro.launch.hlo_analysis import collective_bytes, hlo_flops_bytes
 
 
 SKIP = {
-    # long_500k only for sub-quadratic archs (DESIGN.md §5)
+    # long_500k only for sub-quadratic archs (DESIGN.md §7)
     ("llava-next-mistral-7b", "long_500k"): "full attention at 500k",
     ("granite-moe-3b-a800m", "long_500k"): "full attention at 500k",
     ("deepseek-moe-16b", "long_500k"): "full attention at 500k",
@@ -55,7 +56,7 @@ def _lower_cell(cfg, shape, mesh, rules, *, q_chunk, k_chunk,
                 seq_override=None):
     """Lower (not compile) the cell's step function."""
     model = build_model(cfg)
-    with jax.set_mesh(mesh), use_rules(rules):
+    with compat.set_mesh(mesh), use_rules(rules):
         batch_sds, batch_spec_tree = model.input_specs(
             shape, seq_override=seq_override)
         batch_sh = specs_to_shardings(batch_spec_tree, mesh, rules)

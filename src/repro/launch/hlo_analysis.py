@@ -86,8 +86,14 @@ def _group_size(line: str) -> int:
     return 2  # collective-permute / unknown: conservative
 
 
-def hlo_flops_bytes(cost: dict) -> tuple[float, float]:
-    """Pull (flops, bytes) out of compiled.cost_analysis()."""
+def hlo_flops_bytes(cost) -> tuple[float, float]:
+    """Pull (flops, bytes) out of compiled.cost_analysis().
+
+    jax >= 0.5 returns a flat dict; 0.4.x returns a one-element list of
+    per-device dicts.
+    """
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     flops = float(cost.get("flops", 0.0))
     bts = float(cost.get("bytes accessed", 0.0))
     return flops, bts

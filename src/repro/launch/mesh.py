@@ -2,6 +2,8 @@
 
 Defined as FUNCTIONS so importing this module never touches jax device
 state; ``jax.make_mesh`` is only called when a launcher actually runs.
+jax-version differences (AxisType absent on 0.4.x) are handled by
+``repro._compat.make_mesh``.
 
 Topology: TPU v5e, 256 chips/pod as a (16, 16) = (data, model) grid;
 multi-pod adds the leading "pod" axis (2 pods = 512 chips) used for
@@ -10,18 +12,18 @@ data parallelism across the DCN/ICI pod boundary.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro._compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(n: int | None = None, axis: str = "data"):
     """1-D mesh over however many (host) devices exist — used by the
     distributed-spMVM examples and tests."""
     n = n or len(jax.devices())
-    return jax.make_mesh((n,), (axis,), axis_types=(AxisType.Auto,))
+    return make_mesh((n,), (axis,))

@@ -1,16 +1,26 @@
-"""SparseFFN: pruned FFN weights stored in pJDS, applied with pjds_spmm.
+"""SparseFFN: pruned FFN weights in blocked sparse storage + spMM.
 
 The paper's storage format promoted to a first-class LM feature
 (DESIGN.md §4): magnitude-prune a trained FFN to ``density``, convert the
-surviving weights to pJDS, and run the forward pass as multi-RHS spMVM.
+surviving weights to SELL-C-sigma (default) or pJDS, and run the forward
+pass as multi-RHS spMVM.
+
+Format choice rides the unified dispatch layer (DESIGN.md §5): with
+``format="sell"`` rows — i.e. output features — are sorted only inside
+sigma-row windows, so the inverse permutation that restores feature
+order after the spMM is a window-local gather instead of a global one.
+``format="auto"`` (default) compares estimated padded storage between
+SELL and pJDS — for multi-RHS spMM the unpermute amortises over the T
+RHS columns while padding multiplies by T, so minimum storage wins and
+the window is kept only when it is free.
 
 Memory story (the paper's Table-1 argument, on LM weights): an FFN with
 density d stores ~d * (4+4)/2 bytes per original bf16 element (f32 value
 + int32 index, halved... see ``memory_summary``), so densities below ~1/6
-shrink the footprint vs dense bf16 while pJDS (vs ELLPACK) keeps the
-padding overhead <1% even though per-row non-zero counts after magnitude
+shrink the footprint vs dense bf16 while the block-local padding (vs
+ELLPACK) stays <1% even though per-row non-zero counts after magnitude
 pruning vary wildly — exactly the row-length-variance regime (Fig. 3)
-pJDS was designed for.
+pJDS/SELL were designed for.
 
 This module is single-device (inference compression); the distributed
 dry-run path uses dense FFN.
@@ -29,29 +39,52 @@ from repro.kernels import ops
 
 @dataclasses.dataclass
 class SparseLinear:
-    """y = x @ W with W^T stored in pJDS (rows = output features)."""
+    """y = x @ W with W^T stored blocked-sparse (rows = output features)."""
 
     a: ops.PJDSDevice
-    perm: np.ndarray          # row sort of the OUTPUT features
+    inv_perm: jax.Array       # (n_out,) sorted position of each output feature
+    fmt: str                  # "sell" | "pjds"
+    sigma: int                # sort window (n_rows_pad for pjds)
     n_out: int
     n_in_pad: int
     density: float
 
     @staticmethod
     def from_dense(w: np.ndarray, density: float, b_r: int = 128,
-                   chunk_l: int = 8) -> "SparseLinear":
+                   chunk_l: int = 8, format: str = "auto",
+                   sigma: int | None = None) -> "SparseLinear":
         """Magnitude-prune ``w`` (in, out) to ``density`` and pack."""
         n_in, n_out = w.shape
         k = max(int(w.size * density), 1)
         thresh = np.partition(np.abs(w).ravel(), -k)[-k]
         wp = np.where(np.abs(w) >= thresh, w, 0.0)
-        # pJDS over W^T: each row = one output feature's input weights
+        # blocked storage over W^T: each row = one output feature's weights
         csr = F.csr_from_dense(np.asarray(wp.T, dtype=np.float32))
-        pj = F.csr_to_pjds(csr, b_r=b_r, diag_align=chunk_l,
-                           permuted_cols=False)
+        if format == "auto":
+            # Multi-RHS spMM economics differ from spMV: the unpermute
+            # gather amortises over the T RHS columns while padding
+            # multiplies by T, so minimum storage wins — keep the SELL
+            # window (locality) only when it pads no worse than pJDS.
+            rl = csr.row_lengths()
+            sell_e = F.estimate_storage_elements(rl, "sell", b_r,
+                                                 chunk_l, sigma)
+            pjds_e = F.estimate_storage_elements(rl, "pjds", b_r, chunk_l)
+            format = "sell" if sell_e <= pjds_e else "pjds"
+        if format == "sell":
+            s = F.csr_to_sell(csr, c=b_r, sigma=sigma, diag_align=chunk_l,
+                              permuted_cols=False)
+            pj, sig = s.pjds, s.sigma
+        elif format == "pjds":
+            pj = F.csr_to_pjds(csr, b_r=b_r, diag_align=chunk_l,
+                               permuted_cols=False)
+            sig = pj.n_rows_pad
+        else:
+            raise ValueError(f"unknown format {format!r}")
         return SparseLinear(
             a=ops.to_device_pjds(pj, chunk_l=chunk_l),
-            perm=pj.perm,
+            inv_perm=jnp.asarray(pj.inv_perm[:n_out]),
+            fmt=format,
+            sigma=sig,
             n_out=n_out,
             n_in_pad=_pad(n_in, 1),
             density=float((wp != 0).mean()),
@@ -66,12 +99,9 @@ class SparseLinear:
         t_pad = _pad(t, 128)
         xt = jnp.pad(xt, ((0, 0), (0, t_pad - t)))
         y_perm = ops.pjds_matmat(self.a, xt, backend=backend)  # (rows_pad, T)
-        # unpermute rows back to output-feature order
-        inv = np.zeros(self.a.n_rows_pad, np.int32)
-        valid = self.perm < self.n_out
-        inv_idx = jnp.asarray(self.perm[valid])
-        y = jnp.zeros((self.n_out, t_pad), y_perm.dtype)
-        y = y.at[inv_idx].set(y_perm[jnp.asarray(np.nonzero(valid)[0])])
+        # rows back to output-feature order: window-local gather for SELL,
+        # global gather for pJDS — never a scatter.
+        y = y_perm[self.inv_perm]
         return y[:, :t].T.reshape(*lead, self.n_out).astype(x.dtype)
 
     def memory_summary(self, dense_bytes_per_el: int = 2) -> dict:
@@ -93,12 +123,13 @@ def _pad(x, m):
     return (x + m - 1) // m * m
 
 
-def sparsify_ffn_params(ffn_params: dict, density: float) -> dict:
+def sparsify_ffn_params(ffn_params: dict, density: float,
+                        format: str = "auto") -> dict:
     """Convert a dense FFN param dict (w1/w3/w2) to SparseLinear ops."""
     out = {}
     for k, v in ffn_params.items():
         w = np.asarray(jax.device_get(v["w"]), np.float32)
-        out[k] = SparseLinear.from_dense(w, density)
+        out[k] = SparseLinear.from_dense(w, density, format=format)
     return out
 
 

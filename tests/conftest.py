@@ -1,6 +1,13 @@
 import numpy as np
 import pytest
 
+# When hypothesis is not installed (the pinned container omits it; CI
+# installs the real package), register the deterministic fallback before
+# test modules import it.
+from repro._compat import hypothesis_fallback
+
+hypothesis_fallback.install()
+
 
 @pytest.fixture
 def rng():

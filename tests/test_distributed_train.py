@@ -15,7 +15,7 @@ _SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import dataclasses
     import numpy as np, jax, jax.numpy as jnp
-    from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding, PartitionSpec as P
     from repro import configs
     from repro.models.api import build_model
     from repro.models.sharding import use_rules
@@ -24,10 +24,10 @@ _SCRIPT = textwrap.dedent("""
     from repro.train.step import (make_train_step, train_state_shardings,
                                   batch_shardings)
     from repro.checkpoint import store
+    from repro._compat import set_mesh, make_mesh
 
     def mesh_of(dp, tp):
-        return jax.make_mesh((dp, tp), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        return make_mesh((dp, tp), ("data", "model"))
 
     cfg = dataclasses.replace(
         configs.smoke("qwen2.5-14b"), d_model=64, d_ff=128, n_layers=2)
@@ -37,7 +37,7 @@ _SCRIPT = textwrap.dedent("""
     out = {}
 
     def build(mesh):
-        with jax.set_mesh(mesh), use_rules(rules):
+        with set_mesh(mesh), use_rules(rules):
             param_sh, opt_sh = train_state_shardings(model, mesh, rules)
             opt = AdamW(lr_fn=constant(1e-3))
             step = jax.jit(
@@ -48,7 +48,7 @@ _SCRIPT = textwrap.dedent("""
 
     mesh8 = mesh_of(4, 2)
     opt, step, param_sh, opt_sh = build(mesh8)
-    with jax.set_mesh(mesh8), use_rules(rules):
+    with set_mesh(mesh8), use_rules(rules):
         params = jax.jit(model.init, out_shardings=param_sh)(
             jax.random.PRNGKey(0))
         opt_state = jax.jit(opt.init, out_shardings=opt_sh)(params)
@@ -76,7 +76,7 @@ _SCRIPT = textwrap.dedent("""
     # elastic restart on a 4-device mesh
     mesh4 = mesh_of(2, 2)
     opt4, step4, p_sh4, o_sh4 = build(mesh4)
-    with jax.set_mesh(mesh4), use_rules(rules):
+    with set_mesh(mesh4), use_rules(rules):
         tgt = (jax.eval_shape(model.init, jax.random.PRNGKey(0)),
                jax.eval_shape(opt4.init,
                               jax.eval_shape(model.init,
