@@ -1,0 +1,159 @@
+"""Distributed halo-exchange benchmark: gathered vs full-slice comm,
+single vs multi-RHS.
+
+Sweeps the banded boundary-coupled test matrix (halo_w = 2, sparse
+coupling — the regime the paper's Eq. 3-4 link model cares about) over
+communication modes x halo implementation x RHS block size on 8 virtual
+host devices (subprocess, this process keeps one device), recording
+per-device communication volume and wall-clock.  Also times k=4
+``dist_matmat`` against 4 sequential ``dist_matvec`` calls — the
+multi-RHS amortisation of the streamed matrix and the halo set-up.
+
+Host-CPU collectives through shared memory are not an ICI fabric, so
+(as with bench_scaling) the gathered-vs-full and matmat-vs-matvec
+RATIOS are the comparable quantities; the comm_bytes columns are exact.
+
+Writes ``BENCH_dist.json`` (CI artifact).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from .common import csv_row, write_bench_json
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, time
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core import formats as F, dist_spmv as D
+    from repro.launch.mesh import make_host_mesh
+
+    n_dev = 8
+    mesh = make_host_mesh(n_dev)
+    rng = np.random.default_rng(0)
+
+    def banded(n, reach, stride=8):
+        # tridiagonal band + sparse long-range coupling reaching into the
+        # second neighbor slice: the gathered halo's winning regime
+        a = np.zeros((n, n), np.float32)
+        i = np.arange(n)
+        a[i, i] = 4.0
+        a[i[:-1], i[:-1] + 1] = -1.0
+        a[i[1:], i[1:] - 1] = -1.0
+        far = i[::stride]
+        for sgn in (+1, -1):
+            tgt = far + sgn * reach
+            ok = (tgt >= 0) & (tgt < n)
+            a[far[ok], tgt[ok]] = -0.5
+        return F.csr_from_dense(a)
+
+    def timed(fn, arg, warmup=3, iters=10):
+        for _ in range(warmup):
+            jax.block_until_ready(fn(arg))
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(arg))
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+    b_r = 128
+    n = 8 * b_r * 2                       # n_loc = 256
+    m = banded(n, reach=384)              # n_loc < reach < 2*n_loc
+    dist = D.partition_csr(m, n_dev, b_r=b_r)
+    assert dist.halo_w == 2, dist.halo_w
+
+    out = {"halo_w": dist.halo_w, "halo_lens": list(dist.halo_lens),
+           "n_loc": dist.n_loc, "nnz": int(m.nnz), "rows": []}
+    shard = jax.NamedSharding(mesh, P("data"))
+    shard2 = jax.NamedSharding(mesh, P("data", None))
+    for k in (1, 4):
+        X = rng.standard_normal((dist.n_global_pad, k)).astype(np.float32)
+        for halo in ("gathered", "full"):
+            comm = dist.comm_bytes_per_device(value_bytes=4, k=k, halo=halo)
+            for mode in ("vector", "naive", "overlap"):
+                if k == 1:
+                    f = jax.jit(D.make_dist_matvec(dist, mesh, "data", mode,
+                                                   halo=halo))
+                    arg = jax.device_put(jnp.asarray(X[:, 0]), shard)
+                else:
+                    f = jax.jit(D.make_dist_matmat(dist, mesh, "data", mode,
+                                                   halo=halo))
+                    arg = jax.device_put(jnp.asarray(X), shard2)
+                t = timed(f, arg)
+                out["rows"].append(dict(
+                    kind="sweep", halo=halo, mode=mode, k=k, t_us=t * 1e6,
+                    comm_bytes=comm,
+                    gfs=2 * m.nnz * k / t / 1e9))
+
+    # k=4 spMM vs 4 sequential spMVMs (overlap mode, gathered halo)
+    X4 = rng.standard_normal((dist.n_global_pad, 4)).astype(np.float32)
+    mm = jax.jit(D.make_dist_matmat(dist, mesh, "data", "overlap"))
+    arg4 = jax.device_put(jnp.asarray(X4), shard2)
+    t_mm = timed(mm, arg4)
+    mv = jax.jit(D.make_dist_matvec(dist, mesh, "data", "overlap"))
+    cols = [jax.device_put(jnp.asarray(X4[:, j]), shard) for j in range(4)]
+    for c in cols:
+        jax.block_until_ready(mv(c))
+    import time as _t
+    ts = []
+    for _ in range(10):
+        t0 = _t.perf_counter()
+        for c in cols:
+            jax.block_until_ready(mv(c))
+        ts.append(_t.perf_counter() - t0)
+    t_seq = float(np.median(ts))
+    out["rows"].append(dict(kind="matmat_vs_seq", t_matmat_us=t_mm * 1e6,
+                            t_seq4_us=t_seq * 1e6,
+                            speedup=t_seq / t_mm))
+    print("RESULTS " + json.dumps(out))
+""")
+
+
+def _measured():
+    env = dict(os.environ, PYTHONPATH=os.path.join(
+        os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SCRIPT], capture_output=True,
+                       text=True, env=env, timeout=560)
+    if r.returncode != 0:
+        raise RuntimeError(r.stderr[-2000:])
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULTS ")][-1]
+    return json.loads(line[len("RESULTS "):])
+
+
+def run(print_rows=True):
+    res = _measured()
+    rows = res["rows"]
+    meta = dict(kind="meta", halo_w=res["halo_w"],
+                halo_lens=res["halo_lens"], n_loc=res["n_loc"],
+                nnz=res["nnz"])
+    if print_rows:
+        for r in rows:
+            if r["kind"] == "sweep":
+                print(csv_row(
+                    f"dist_{r['halo']}_{r['mode']}_k{r['k']}", r["t_us"],
+                    f"comm={r['comm_bytes']}B/dev {r['gfs']:.2f}GF/s"))
+            else:
+                print(csv_row("dist_matmat4_vs_4matvec", r["t_matmat_us"],
+                              f"seq4={r['t_seq4_us']:.1f}us "
+                              f"speedup={r['speedup']:.2f}x"))
+        g = next(r for r in rows
+                 if r["kind"] == "sweep" and r["halo"] == "gathered")
+        f = next(r for r in rows
+                 if r["kind"] == "sweep" and r["halo"] == "full")
+        print(csv_row("dist_comm_reduction", 0.0,
+                      f"{f['comm_bytes'] / max(g['comm_bytes'], 1):.1f}x "
+                      f"less halo traffic (halo_w={res['halo_w']})"))
+    write_bench_json("dist", [meta] + rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

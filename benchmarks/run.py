@@ -15,12 +15,14 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: table1,fig3,eq,scaling,kernels,sell")
+                    help="comma list: table1,fig3,eq,scaling,kernels,sell,"
+                         "dist")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from . import (bench_formats, bench_histograms, bench_perf_model,
-                   bench_scaling, bench_kernels, bench_sell, bench_sparse_ffn)
+                   bench_scaling, bench_kernels, bench_sell, bench_sparse_ffn,
+                   bench_dist)
     suites = [
         ("table1", bench_formats.run),      # paper Table 1
         ("fig3", bench_histograms.run),     # paper Fig. 3
@@ -29,6 +31,7 @@ def main() -> None:
         ("sell", bench_sell.run),           # SELL-C-sigma sigma sweep
         ("sparse_ffn", bench_sparse_ffn.run),  # beyond-paper: pJDS in LMs
         ("scaling", bench_scaling.run),     # paper Fig. 5
+        ("dist", bench_dist.run),           # gathered vs full halo, spMM
     ]
     if only:
         unknown = only - {name for name, _ in suites}

@@ -31,7 +31,9 @@ def main():
 
     dist = D.partition_csr(m, n_dev, b_r=128)
     print(f"row partition: {dist.n_loc} rows/device, halo_w={dist.halo_w}, "
-          f"halo traffic {dist.comm_bytes_per_device(4)/1e3:.1f} kB/dev/spMVM")
+          f"halo traffic {dist.comm_bytes_per_device(4)/1e3:.1f} kB/dev/spMVM "
+          f"gathered ({dist.comm_bytes_per_device(4, halo='full')/1e3:.1f} kB "
+          f"full-slice)")
 
     rng = np.random.default_rng(0)
     b = np.zeros(dist.n_global_pad, np.float32)
@@ -46,6 +48,21 @@ def main():
         dt = time.perf_counter() - t0
         print(f"mode={mode:8s} iters={int(res.iters):4d} "
               f"rel_res={float(res.residual):.2e} wall={dt:.2f}s")
+
+    # block-CG: 4 right-hand sides through the multi-RHS operator at once
+    k = 4
+    bk = np.zeros((dist.n_global_pad, k), np.float32)
+    bk[:m.n_rows] = rng.standard_normal((m.n_rows, k))
+    bkj = jax.device_put(jnp.asarray(bk),
+                         jax.NamedSharding(mesh, P("data", None)))
+    mm = D.make_dist_matmat(dist, mesh, "data", "overlap")
+    t0 = time.perf_counter()
+    bres = S.block_cg(mm, bkj, maxiter=4000, tol=1e-6)
+    jax.block_until_ready(bres.x)
+    dt = time.perf_counter() - t0
+    print(f"block-CG  k={k}   iters={int(bres.iters):4d} "
+          f"rel_res={float(np.max(np.asarray(bres.residual))):.2e} "
+          f"wall={dt:.2f}s")
 
     # verify against dense solve
     mv = D.make_dist_matvec(dist, mesh, "data", "overlap")

@@ -1,4 +1,4 @@
-"""Distributed-memory spMVM (paper §3) on a JAX device mesh.
+"""Distributed-memory spMVM / spMM (paper §3) on a JAX device mesh.
 
 Row-wise partitioning exactly as in the paper: device ``p`` owns a
 contiguous slice of rows and the conformal slice of the RHS/LHS vectors.
@@ -19,12 +19,24 @@ permutation crosses the network, the inverse permutation applied to y
 after the kernels is window-local, and the halo/RHS access pattern keeps
 the locality of the original row ordering up to sigma (DESIGN.md §3/§6).
 
-The halo moves with ``lax.ppermute`` ring shifts of the x slice — the
-JAX-native form of the paper's "local gather + point-to-point" step.  The
-partitioner measures the needed window ``w`` (max column distance in
-units of slices); for the banded test matrices w is 1-2, for general
-matrices it degrades toward all-gather, which is the paper's observation
-that some sparsity patterns are invalid for multi-accelerator scaling.
+Halo exchange (paper §3: "local gather + point-to-point") has two
+implementations, selected by ``halo=``:
+
+* ``"gathered"`` (default) — the paper-faithful compressed exchange: at
+  partition time each device records, per ring neighbor, WHICH of its
+  columns that neighbor actually references (``send_idx``), padded to a
+  static per-neighbor maximum.  At run time each device gathers exactly
+  those entries, ``ppermute``s the compact buffers, and scatters the
+  received values into a dense ext buffer (``recv_idx``; padding lanes
+  carry an out-of-range sentinel and are dropped).  Communication volume
+  is the MEASURED coupling ``sum(halo_lens)`` elements, not the slice
+  size — the quantity the paper's Eq. 2-4 link term should see.
+* ``"full"`` — the previous behaviour: ring-shift the whole x slice
+  ``2*halo_w`` times.  Kept as the bulk baseline ``benchmarks/bench_dist``
+  compares against.
+
+A purely block-diagonal matrix measures ``halo_w == 0`` and skips the
+exchange (and the remote kernel) entirely.
 
 Three communication modes (paper §3.1), distinguished by their data
 dependences — inspect the compiled HLO to see the schedules differ:
@@ -40,6 +52,14 @@ dependences — inspect the compiled HLO to see the schedules differ:
   kernel depends only on x -> XLA's async collectives overlap the halo
   with the local spMVM.  This is the TPU-idiomatic equivalent of the
   paper's dedicated-MPI-thread task mode.
+
+Multi-RHS: ``dist_matmat`` applies the same partition to a block of
+``k`` right-hand sides (x of shape ``(n_global_pad, k)``), riding the
+``pjds_matmat`` kernel; the gathered halo buffers simply carry ``k``
+columns per entry, so the matrix stream AND the per-entry exchange
+set-up cost are amortised over ``k`` vectors (SELL-C-sigma follow-up,
+arXiv:1307.6209 §"multi-vector").  The block solvers in
+``core.solvers`` (block-CG / block-Lanczos) run on top of it.
 """
 from __future__ import annotations
 
@@ -57,9 +77,16 @@ from repro._compat import shard_map
 from repro.kernels import ops
 
 Mode = Literal["vector", "naive", "overlap"]
+Halo = Literal["gathered", "full"]
 
 __all__ = ["DistPJDS", "partition_csr", "dist_matvec", "make_dist_matvec",
-           "padded_global_size"]
+           "dist_matmat", "make_dist_matmat", "padded_global_size",
+           "halo_distances"]
+
+
+def halo_distances(halo_w: int) -> list[int]:
+    """Signed ring distances of the halo, in ext-buffer slot order."""
+    return [d for d in range(-halo_w, halo_w + 1) if d != 0]
 
 
 @jax.tree_util.register_dataclass
@@ -76,12 +103,20 @@ class DistPJDS:
     rem_chunk_map: jax.Array
     rem_row_block: jax.Array
     inv_perm: jax.Array       # (P, n_loc) undo the device-local row sort
+    send_idx: jax.Array       # (P, 2*halo_w, max_h) int32: local columns this
+                              # device gathers for each outgoing ppermute
+    recv_idx: jax.Array       # (P, 2*halo_w, max_h) int32: ext-buffer slots
+                              # the received compact buffer scatters into
+                              # (padding = ext_len sentinel, dropped)
     n_dev: int = dataclasses.field(metadata=dict(static=True))
     n_loc: int = dataclasses.field(metadata=dict(static=True))
     n_blocks: int = dataclasses.field(metadata=dict(static=True))
     b_r: int = dataclasses.field(metadata=dict(static=True))
     chunk_l: int = dataclasses.field(metadata=dict(static=True))
     halo_w: int = dataclasses.field(metadata=dict(static=True))
+    halo_lens: tuple = dataclasses.field(metadata=dict(static=True))
+                              # per-distance gathered halo sizes (elements),
+                              # ordered as halo_distances(halo_w)
     n_rows: int = dataclasses.field(metadata=dict(static=True))  # unpadded
     sigma: int = dataclasses.field(metadata=dict(static=True))   # sort window
 
@@ -89,9 +124,23 @@ class DistPJDS:
     def n_global_pad(self) -> int:
         return self.n_dev * self.n_loc
 
-    def comm_bytes_per_device(self, value_bytes: int = 8) -> int:
-        """Halo traffic per device per spMVM (both directions)."""
-        return 2 * self.halo_w * self.n_loc * value_bytes
+    @property
+    def ext_len(self) -> int:
+        return (2 * self.halo_w + 1) * self.n_loc
+
+    def comm_bytes_per_device(self, value_bytes: int = 8, k: int = 1,
+                              halo: Halo = "gathered") -> int:
+        """Halo traffic per device per spMVM (send == recv volume).
+
+        ``"gathered"`` reports the MEASURED per-neighbor halo sizes the
+        compressed exchange actually ships; ``"full"`` the 2*halo_w
+        full-slice ring shifts of the bulk baseline.  ``k`` scales for
+        multi-RHS (``dist_matmat``)."""
+        if halo == "full":
+            return 2 * self.halo_w * self.n_loc * value_bytes * k
+        if halo != "gathered":
+            raise ValueError(halo)
+        return sum(self.halo_lens) * value_bytes * k
 
 
 def padded_global_size(n_rows: int, n_dev: int, b_r: int = 128) -> int:
@@ -149,7 +198,13 @@ def partition_csr(
 
     ``halo_w`` is measured from the matrix when not given; a matrix whose
     halo window reaches n_dev//2 effectively all-gathers — the pattern the
-    paper's model flags as not multi-accelerator-friendly.
+    paper's model flags as not multi-accelerator-friendly.  A purely
+    block-diagonal matrix measures ``halo_w == 0`` (no exchange at all).
+
+    Alongside the window, the partitioner records the per-neighbor
+    gather/scatter index sets of the compressed halo exchange: which of
+    each device's columns every ring neighbor actually references,
+    padded to the static per-distance maximum (``halo_lens``).
 
     ``sigma`` bounds the per-device row-sort window (SELL-C-sigma style;
     default 8*b_r).  ``sigma >= n_loc`` recovers the device-local global
@@ -160,28 +215,53 @@ def partition_csr(
     n_pad = padded_global_size(m.n_rows, n_dev, b_r)
     n_loc = n_pad // n_dev
 
-    # Measure the halo window.
+    slices = [_csr_row_slice(m, p * n_loc, (p + 1) * n_loc, n_loc)
+              for p in range(n_dev)]
+    # Measure which remote columns each device references, per signed ring
+    # distance — this is both the halo window and the gather sets.
+    needs = [F.csr_remote_columns_by_distance(sl, p, n_loc, n_dev)
+             for p, sl in enumerate(slices)]
+    measured = max((max((abs(d) for d in nd), default=0) for nd in needs),
+                   default=0)
     if halo_w is None:
-        halo_w = 0
-        for p in range(n_dev):
-            sl = _csr_row_slice(m, p * n_loc, (p + 1) * n_loc, n_loc)
-            if sl.nnz == 0:
-                continue
-            owner = sl.indices.astype(np.int64) // n_loc
-            d = (owner - p + n_dev) % n_dev
-            d = np.where(d > n_dev // 2, n_dev - d, d)
-            halo_w = max(halo_w, int(d.max(initial=0)))
-    halo_w = max(int(halo_w), 1)
+        halo_w = measured
+    else:
+        halo_w = int(halo_w)
+        if halo_w < measured:
+            raise ValueError(
+                f"halo_w={halo_w} too small: matrix couples devices at ring "
+                f"distance {measured}")
     if halo_w > n_dev // 2 and n_dev > 1:
-        halo_w = max(n_dev // 2, 1)
+        halo_w = n_dev // 2
+
+    dists = halo_distances(halo_w)
+    halo_lens = tuple(
+        max((len(nd.get(d, ())) for nd in needs), default=0) for d in dists)
+    ext_len = (2 * halo_w + 1) * n_loc
+    max_h = max(halo_lens, default=0)
+    # send_idx[p, i]: the local columns device p gathers when the exchange
+    # for distance dists[i] fires (p serves neighbor (p - d) % n_dev, so
+    # the gather list is THAT device's need set).  recv_idx[p, i]: where
+    # the compact buffer received from (p + d) % n_dev lands in p's ext
+    # buffer.  Pad gathers with 0 (valid, ignored downstream) and
+    # scatters with the ext_len sentinel (dropped).
+    send_idx = np.zeros((n_dev, len(dists), max_h), dtype=np.int32)
+    recv_idx = np.full((n_dev, len(dists), max_h), ext_len, dtype=np.int32)
+    for i, d in enumerate(dists):
+        for p in range(n_dev):
+            snd = needs[(p - d) % n_dev].get(d)
+            if snd is not None and len(snd):
+                send_idx[p, i, : len(snd)] = snd
+            rcv = needs[p].get(d)
+            if rcv is not None and len(rcv):
+                recv_idx[p, i, : len(rcv)] = (d + halo_w) * n_loc + rcv
 
     sig = min(int(sigma) if sigma is not None else 8 * b_r, n_loc)
     sig = max(sig, 1)
 
     locs, rems, invs = [], [], []
     for p in range(n_dev):
-        sl = _csr_row_slice(m, p * n_loc, (p + 1) * n_loc, n_loc)
-        loc, rem = _split_loc_rem(sl, p, n_loc, n_dev, halo_w)
+        loc, rem = _split_loc_rem(slices[p], p, n_loc, n_dev, halo_w)
         # One shared per-device row sort (by TOTAL row length) so the two
         # partial results add in the same permuted order — windowed to
         # sigma rows (SELL-C-sigma) so the inverse permutation applied to
@@ -216,12 +296,15 @@ def partition_csr(
         rem_chunk_map=_stack(rems, "chunk_map"),
         rem_row_block=_stack(rems, "row_block"),
         inv_perm=jnp.asarray(np.stack(invs)),
+        send_idx=jnp.asarray(send_idx),
+        recv_idx=jnp.asarray(recv_idx),
         n_dev=n_dev,
         n_loc=n_loc,
         n_blocks=n_blocks,
         b_r=b_r,
         chunk_l=chunk_l,
         halo_w=halo_w,
+        halo_lens=halo_lens,
         n_rows=m.n_rows,
         sigma=sig,
     )
@@ -235,11 +318,13 @@ def _local_spmv(val, col, chunk_map, row_block, x, n_blocks, b_r, chunk_l,
     a = ops.PJDSDevice(val=val, col_idx=col, chunk_map=chunk_map,
                        row_block=row_block, n_blocks=n_blocks, b_r=b_r,
                        chunk_l=chunk_l)
+    if x.ndim == 2:
+        return ops.pjds_matmat(a, x, backend=backend)
     return ops.pjds_matvec(a, x, backend=backend)
 
 
-def _exchange_halo(x_blk, axis: str, n_dev: int, halo_w: int):
-    """Ring ppermute halo: ext buffer = slices of devices p-w..p+w."""
+def _exchange_halo_full(x_blk, axis: str, n_dev: int, halo_w: int):
+    """Bulk ring ppermute halo: ext buffer = slices of devices p-w..p+w."""
     parts = []
     for d in range(halo_w, 0, -1):  # from p-d (send own slice to p+d)
         parts.append(jax.lax.ppermute(
@@ -251,11 +336,41 @@ def _exchange_halo(x_blk, axis: str, n_dev: int, halo_w: int):
     return jnp.concatenate(parts)
 
 
+# Backwards-compatible alias (pre-gathered name).
+_exchange_halo = _exchange_halo_full
+
+
+def _exchange_halo_gathered(x_blk, send_idx, recv_idx, axis: str, n_dev: int,
+                            halo_w: int, halo_lens: tuple):
+    """Compressed halo: gather referenced entries -> ppermute compact
+    per-neighbor buffers -> scatter into the dense ext buffer.
+
+    The ext buffer keeps the same (2w+1)*n_loc coordinates as the bulk
+    exchange (slot w — this device's own slice — stays zero; remote
+    columns never point there), so ``rem_col`` is identical either way.
+    Distances whose measured halo is empty ship nothing at all.
+    """
+    n_loc = x_blk.shape[0]
+    ext = jnp.zeros(((2 * halo_w + 1) * n_loc,) + x_blk.shape[1:],
+                    x_blk.dtype)
+    for i, d in enumerate(halo_distances(halo_w)):
+        h = halo_lens[i]
+        if h == 0:
+            continue
+        buf = x_blk[send_idx[i, :h]]
+        buf = jax.lax.ppermute(
+            buf, axis, [(q, (q - d) % n_dev) for q in range(n_dev)])
+        ext = ext.at[recv_idx[i, :h]].set(buf, mode="drop")
+    return ext
+
+
 def dist_matvec_local(dist: DistPJDS, x_blk: jax.Array, *, axis: str,
                       mode: Mode = "overlap",
-                      backend: ops.Backend = "ref") -> jax.Array:
-    """Per-shard body: x_blk is this device's (n_loc,) slice; operand leaves
-    of ``dist`` carry a leading length-1 device axis (from shard_map)."""
+                      backend: ops.Backend = "ref",
+                      halo: Halo = "gathered") -> jax.Array:
+    """Per-shard body: x_blk is this device's (n_loc,) or (n_loc, k) slice;
+    operand leaves of ``dist`` carry a leading length-1 device axis (from
+    shard_map)."""
     sq = lambda a: a[0]
     spmv = functools.partial(_local_spmv, n_blocks=dist.n_blocks,
                              b_r=dist.b_r, chunk_l=dist.chunk_l,
@@ -265,20 +380,37 @@ def dist_matvec_local(dist: DistPJDS, x_blk: jax.Array, *, axis: str,
     rem_args = (sq(dist.rem_val), sq(dist.rem_col), sq(dist.rem_chunk_map),
                 sq(dist.rem_row_block))
 
-    if mode == "vector":
+    if halo == "gathered":
+        exchange = functools.partial(
+            _exchange_halo_gathered, send_idx=sq(dist.send_idx),
+            recv_idx=sq(dist.recv_idx), axis=axis, n_dev=dist.n_dev,
+            halo_w=dist.halo_w, halo_lens=dist.halo_lens)
+        no_halo = sum(dist.halo_lens) == 0
+    elif halo == "full":
+        exchange = functools.partial(
+            _exchange_halo_full, axis=axis, n_dev=dist.n_dev,
+            halo_w=dist.halo_w)
+        no_halo = dist.halo_w == 0
+    else:
+        raise ValueError(halo)
+
+    if no_halo:
+        # Block-diagonal partition: nothing crosses the network, so every
+        # mode degenerates to the local kernel alone.
+        y = spmv(*loc_args, x_blk)
+    elif mode == "vector":
         # comm, then (implicitly fused) full spMVM — bulk synchronous.
-        ext = _exchange_halo(x_blk, axis, dist.n_dev, dist.halo_w)
+        ext = exchange(x_blk)
         ext, x_dep = jax.lax.optimization_barrier((ext, x_blk))
         y = spmv(*loc_args, x_dep) + spmv(*rem_args, ext)
     elif mode == "naive":
         # local kernel first, comm strictly after (no async progress).
         y_loc = spmv(*loc_args, x_blk)
         x_after, _ = jax.lax.optimization_barrier((x_blk, y_loc))
-        ext = _exchange_halo(x_after, axis, dist.n_dev, dist.halo_w)
-        y = y_loc + spmv(*rem_args, ext)
+        y = y_loc + spmv(*rem_args, exchange(x_after))
     elif mode == "overlap":
         # task mode: halo and local kernel are independent -> overlapped.
-        ext = _exchange_halo(x_blk, axis, dist.n_dev, dist.halo_w)
+        ext = exchange(x_blk)
         y_loc = spmv(*loc_args, x_blk)
         y = y_loc + spmv(*rem_args, ext)
     else:
@@ -287,11 +419,8 @@ def dist_matvec_local(dist: DistPJDS, x_blk: jax.Array, *, axis: str,
     return y[sq(dist.inv_perm)].astype(x_blk.dtype)
 
 
-def make_dist_matvec(dist: DistPJDS, mesh: Mesh, axis: str = "data",
-                     mode: Mode = "overlap",
-                     backend: ops.Backend = "ref"):
-    """Build a jit-able y = A x over a mesh axis.  x: (n_global_pad,)
-    sharded along ``axis``; returns y with the same sharding."""
+def _make_dist_op(dist: DistPJDS, mesh: Mesh, axis: str, mode: Mode,
+                  backend: ops.Backend, halo: Halo, multi_rhs: bool):
     n_dev = dist.n_dev
     if mesh.shape[axis] != n_dev:
         raise ValueError(f"mesh axis {axis}={mesh.shape[axis]} != {n_dev}")
@@ -303,21 +432,53 @@ def make_dist_matvec(dist: DistPJDS, mesh: Mesh, axis: str = "data",
            for f in dataclasses.fields(DistPJDS)
            if f.metadata.get("static") is True},
     )
+    x_spec = P(axis, None) if multi_rhs else P(axis)
 
     @functools.partial(
         shard_map,
         mesh=mesh,
-        in_specs=(operand_specs, P(axis)),
-        out_specs=P(axis),
+        in_specs=(operand_specs, x_spec),
+        out_specs=x_spec,
     )
     def _mv(d, x_blk):
         return dist_matvec_local(d, x_blk, axis=axis, mode=mode,
-                                 backend=backend)
+                                 backend=backend, halo=halo)
 
     return functools.partial(_mv, dist)
 
 
+def make_dist_matvec(dist: DistPJDS, mesh: Mesh, axis: str = "data",
+                     mode: Mode = "overlap",
+                     backend: ops.Backend = "ref",
+                     halo: Halo = "gathered"):
+    """Build a jit-able y = A x over a mesh axis.  x: (n_global_pad,)
+    sharded along ``axis``; returns y with the same sharding."""
+    return _make_dist_op(dist, mesh, axis, mode, backend, halo,
+                         multi_rhs=False)
+
+
+def make_dist_matmat(dist: DistPJDS, mesh: Mesh, axis: str = "data",
+                     mode: Mode = "overlap",
+                     backend: ops.Backend = "ref",
+                     halo: Halo = "gathered"):
+    """Build a jit-able Y = A X for a block of RHS vectors.
+    X: (n_global_pad, k) sharded (axis, None); returns Y alike."""
+    return _make_dist_op(dist, mesh, axis, mode, backend, halo,
+                         multi_rhs=True)
+
+
 def dist_matvec(dist: DistPJDS, x: jax.Array, mesh: Mesh, axis: str = "data",
                 mode: Mode = "overlap",
-                backend: ops.Backend = "ref") -> jax.Array:
-    return make_dist_matvec(dist, mesh, axis, mode, backend)(x)
+                backend: ops.Backend = "ref",
+                halo: Halo = "gathered") -> jax.Array:
+    return make_dist_matvec(dist, mesh, axis, mode, backend, halo)(x)
+
+
+def dist_matmat(dist: DistPJDS, x: jax.Array, mesh: Mesh, axis: str = "data",
+                mode: Mode = "overlap",
+                backend: ops.Backend = "ref",
+                halo: Halo = "gathered") -> jax.Array:
+    if x.ndim != 2:
+        raise ValueError(f"dist_matmat expects x of shape (n, k); got "
+                         f"{x.shape}")
+    return make_dist_matmat(dist, mesh, axis, mode, backend, halo)(x)

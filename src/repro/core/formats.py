@@ -56,6 +56,7 @@ __all__ = [
     "windowed_sort_perm",
     "windowed_block_lengths",
     "estimate_storage_elements",
+    "csr_remote_columns_by_distance",
 ]
 
 _DEFAULT_BR = 128          # rows per pJDS block (lane dimension on TPU)
@@ -450,6 +451,33 @@ def _pjds_with_perm(
 
 def sell_to_dense(s: SELLMatrix) -> np.ndarray:
     return pjds_to_dense(s.pjds)
+
+
+# --------------------------------------------------------------------------
+# Distributed-partition helper: measured halo coupling
+# --------------------------------------------------------------------------
+def csr_remote_columns_by_distance(
+    sl: CSRMatrix, p: int, n_loc: int, n_dev: int
+) -> dict:
+    """For device ``p``'s row slice ``sl`` (a CSR over the GLOBAL column
+    space) under a uniform n_loc-row ring partition: the slice-local
+    column indices it references in each OTHER device's slice, keyed by
+    signed ring distance d (owner = (p + d) % n_dev, |d| <= n_dev//2).
+
+    Each value is sorted and unique — the gather set of the paper's
+    "local gather + point-to-point" halo exchange, i.e. exactly the
+    entries of the neighbor's x slice that must cross the wire.
+    """
+    cols = sl.indices.astype(np.int64)
+    own_lo, own_hi = p * n_loc, (p + 1) * n_loc
+    rcols = cols[(cols < own_lo) | (cols >= own_hi)]
+    owner = rcols // n_loc
+    d = (owner - p + n_dev) % n_dev
+    d = np.where(d > n_dev // 2, d - n_dev, d)
+    return {
+        int(dd): np.unique(rcols[d == dd] % n_loc).astype(np.int32)
+        for dd in np.unique(d)
+    }
 
 
 # --------------------------------------------------------------------------

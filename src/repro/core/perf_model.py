@@ -29,6 +29,7 @@ __all__ = [
     "alpha_range",
     "t_mvm",
     "t_link",
+    "t_link_gathered",
     "n_nzr_upper_for_link_penalty",
     "n_nzr_lower_for_link_penalty",
     "spmvm_flops",
@@ -94,6 +95,21 @@ def t_mvm(n_rows: float, n_nzr: float, alpha: float, dev_bw: float,
 def t_link(n_rows: float, link_bw: float, value_bytes: int = 8) -> float:
     """Paper Eq. (2) right: moving RHS in and LHS out over the slow link."""
     return 2 * value_bytes * n_rows / link_bw
+
+
+def t_link_gathered(halo_elems: float, link_bw: float,
+                    value_bytes: int = 8, k: int = 1) -> float:
+    """Gathered-halo refinement of the Eq. (2) link term: with the
+    compressed exchange only the MEASURED per-neighbor halo entries cross
+    the link, not the full slice.  ``halo_elems`` is the sum of the
+    per-neighbor gathered halo sizes (``DistPJDS.halo_lens``; equals
+    ``comm_bytes_per_device() / value_bytes``); ``k`` scales for a
+    multi-RHS block, whose halo buffers carry k columns per entry.  With
+    this term the model prices what the wire actually carries — a purely
+    block-diagonal partition (halo_elems == 0) costs no link time at
+    all, where the slice-proportional Eq. (2) term would still charge
+    ``2 * n_loc * value_bytes / B_link``."""
+    return value_bytes * k * halo_elems / link_bw
 
 
 def n_nzr_upper_for_link_penalty(dev_bw: float, link_bw: float,

@@ -14,6 +14,15 @@ against an abstract ``matvec`` closure, so they run unchanged on:
 
 All loops are ``jax.lax.while_loop`` / ``fori_loop`` so the whole solve
 is one compiled program (no host round-trips per iteration).
+
+The BLOCK variants (``block_cg``, ``block_lanczos``) carry ``k`` vectors
+at once through a multi-RHS operator (``ops.pjds_matmat`` /
+``dist_spmv.make_dist_matmat``): the matrix is streamed from memory once
+per iteration for all k systems, and in the distributed case the halo
+exchange set-up cost is amortised the same way — the two levers the
+SELL-C-sigma follow-up (arXiv:1307.6209) identifies for escaping the
+spMVM memory roofline.  All k-by-k reductions (X^T Y) lower to per-shard
+matmuls + all-reduce under pjit, so the block solvers stay fully sharded.
 """
 from __future__ import annotations
 
@@ -23,7 +32,9 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["cg", "CGResult", "lanczos", "power_iteration"]
+__all__ = ["cg", "CGResult", "lanczos", "power_iteration",
+           "block_cg", "BlockCGResult", "block_lanczos",
+           "block_tridiag_eigvals"]
 
 MatVec = Callable[[jax.Array], jax.Array]
 
@@ -84,6 +95,119 @@ def lanczos(matvec: MatVec, v0: jax.Array, m: int = 50):
         body, (jnp.zeros_like(v), v, jnp.asarray(0.0, v.dtype)), None, length=m
     )
     return alphas, betas
+
+
+class BlockCGResult(NamedTuple):
+    x: jax.Array          # (n, k)
+    iters: jax.Array
+    residual: jax.Array   # (k,) per-column relative residual
+
+
+def _ridge_solve(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve the k-by-k system with a tiny trace-relative ridge so the
+    block recurrences survive a column converging early (the Gram
+    matrices go singular exactly when a residual column hits zero)."""
+    k = a.shape[0]
+    eps = jnp.asarray(jnp.finfo(a.dtype).eps, a.dtype)
+    ridge = eps * (jnp.trace(a) / k) + jnp.asarray(1e-30, a.dtype)
+    return jnp.linalg.solve(a + ridge * jnp.eye(k, dtype=a.dtype), b)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def block_cg(matvec: MatVec, b: jax.Array, x0: jax.Array | None = None,
+             maxiter: int = 500, tol: float = 1e-6) -> BlockCGResult:
+    """Block conjugate gradients (O'Leary 1980) for SPD A, k RHS at once.
+
+    b: (n, k).  ``matvec`` must accept (n, k) — e.g. the multi-RHS
+    distributed operator from ``dist_spmv.make_dist_matmat``.  Stops
+    when EVERY column's relative residual is below ``tol``.
+    """
+    x = jnp.zeros_like(b) if x0 is None else x0
+    r = b - matvec(x)
+    p = r
+    rtr = r.T @ r                                     # (k, k)
+    b2 = jnp.maximum(jnp.sum(b * b, axis=0), 1e-30)   # (k,)
+
+    def cond(state):
+        _, _, _, rtr, k_it = state
+        res2 = jnp.diagonal(rtr) / b2
+        return jnp.any(res2 > tol ** 2) & (k_it < maxiter)
+
+    def body(state):
+        x, r, p, rtr, k_it = state
+        ap = matvec(p)
+        alpha = _ridge_solve(p.T @ ap, rtr)           # (k, k)
+        x = x + p @ alpha
+        r = r - ap @ alpha
+        rtr_new = r.T @ r
+        beta = _ridge_solve(rtr, rtr_new)
+        p = r + p @ beta
+        return x, r, p, rtr_new, k_it + 1
+
+    x, r, p, rtr, k_it = jax.lax.while_loop(
+        cond, body, (x, r, p, rtr, jnp.int32(0)))
+    return BlockCGResult(x=x, iters=k_it,
+                         residual=jnp.sqrt(jnp.diagonal(rtr) / b2))
+
+
+def _chol_qr(w: jax.Array):
+    """CholeskyQR: W = Q R with Q^T Q = I via the k-by-k Gram matrix —
+    only matmuls and a k-by-k factorization, so it stays sharded along n
+    (a tall-skinny QR would gather W).  Returns (Q, R upper)."""
+    k = w.shape[1]
+    g = w.T @ w
+    eps = jnp.asarray(jnp.finfo(g.dtype).eps, g.dtype)
+    g = g + (eps * (jnp.trace(g) / k) + jnp.asarray(1e-30, g.dtype)) \
+        * jnp.eye(k, dtype=g.dtype)
+    l = jnp.linalg.cholesky(g)                        # G = L L^T
+    # Q = W L^{-T}:  solve L Y = W^T, Q = Y^T
+    q = jax.scipy.linalg.solve_triangular(l, w.T, lower=True).T
+    return q, l.T
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def block_lanczos(matvec: MatVec, v0: jax.Array, m: int = 25):
+    """m-step block Lanczos for symmetric A with block size k = v0.shape[1].
+
+    Returns (A_blocks (m, k, k), B_blocks (m, k, k)) of the block
+    tridiagonal T_m:  A V_j = V_{j-1} B_{j-1}^T + V_j A_j + V_{j+1} B_j.
+    Eigenvalues of T_m approximate extremal eigenvalues of A, converging
+    faster per matrix pass than scalar Lanczos because every pass streams
+    the matrix once for k directions (``block_tridiag_eigvals`` builds
+    and solves T_m host-side)."""
+    v, _ = _chol_qr(v0)
+    k = v.shape[1]
+
+    def body(carry, _):
+        v_prev, v, b_prev = carry
+        w = matvec(v) - v_prev @ b_prev.T
+        a = v.T @ w
+        w = w - v @ a
+        # one full reorthogonalisation pass against the two known blocks
+        w = w - v @ (v.T @ w) - v_prev @ (v_prev.T @ w)
+        v_new, b = _chol_qr(w)
+        return (v, v_new, b), (a, b)
+
+    init = (jnp.zeros_like(v), v, jnp.zeros((k, k), v.dtype))
+    _, (alphas, betas) = jax.lax.scan(body, init, None, length=m)
+    return alphas, betas
+
+
+def block_tridiag_eigvals(a_blocks, b_blocks):
+    """Eigenvalues of the block-Lanczos block tridiagonal (host, numpy)."""
+    import numpy as np
+    a = np.asarray(a_blocks, dtype=np.float64)
+    b = np.asarray(b_blocks, dtype=np.float64)
+    m, k, _ = a.shape
+    t = np.zeros((m * k, m * k))
+    for j in range(m):
+        s = slice(j * k, (j + 1) * k)
+        t[s, s] = (a[j] + a[j].T) / 2
+        if j + 1 < m:
+            s1 = slice((j + 1) * k, (j + 2) * k)
+            t[s1, s] = b[j]
+            t[s, s1] = b[j].T
+    return np.linalg.eigvalsh(t)
 
 
 def tridiag_eigvals(alphas, betas):

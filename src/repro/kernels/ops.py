@@ -336,12 +336,9 @@ class SparseDevice:
 
     def matvec(self, x: jax.Array, backend: Backend = "ref") -> jax.Array:
         """y = A x, original basis, length shape[0]."""
-        if x.shape[-1] < self.shape[1]:
-            # jax clamps out-of-range gathers, which would silently
-            # return garbage instead of failing.
-            raise ValueError(
-                f"x has {x.shape[-1]} entries; matrix has {self.shape[1]} "
-                f"columns")
+        if x.ndim == 2:
+            return self.matmat(x, backend)
+        self._check_cols(x)
         if self.fmt == "csr":
             return csr_matvec(self.dev, x, backend)
         if self.fmt == "ellpack_r":
@@ -352,6 +349,39 @@ class SparseDevice:
             y_p = pjds_matvec(self.dev, x, backend)
             return y_p[self.inv_perm][: self.n_rows]
         raise ValueError(f"unknown format {self.fmt!r}")
+
+    def matmat(self, x: jax.Array, backend: Backend = "ref") -> jax.Array:
+        """Y = A X for a block of RHS vectors, original basis.
+
+        x: (n_cols, k) -> (shape[0], k).  The blocked formats ride the
+        multi-RHS pJDS path (the storage layouts are identical, only the
+        row unpermute differs); CSR/ELLPACK use the generalized refs.
+        """
+        self._check_cols(x)
+        if self.fmt == "csr":
+            return R.csr_matvec_ref(self.dev.data, self.dev.indices,
+                                    self.dev.row_ids, x, self.dev.n_rows)
+        if self.fmt == "ellpack_r":
+            return R.ell_matvec_ref(self.dev.val, self.dev.col_idx,
+                                    self.dev.rowlen, x)[: self.n_rows]
+        if self.fmt in ("sell", "pjds"):
+            d = self.dev
+            a = d if self.fmt == "pjds" else PJDSDevice(
+                val=d.val, col_idx=d.col_idx, chunk_map=d.chunk_map,
+                row_block=d.row_block, n_blocks=d.n_blocks, b_r=d.b_r,
+                chunk_l=d.chunk_l)
+            y_p = pjds_matmat(a, x, backend)
+            inv = d.inv_perm if self.fmt == "sell" else self.inv_perm
+            return y_p[inv][: self.n_rows]
+        raise ValueError(f"unknown format {self.fmt!r}")
+
+    def _check_cols(self, x: jax.Array) -> None:
+        n = x.shape[0] if x.ndim == 2 else x.shape[-1]
+        if n < self.shape[1]:
+            # jax clamps out-of-range gathers, which would silently
+            # return garbage instead of failing.
+            raise ValueError(
+                f"x has {n} entries; matrix has {self.shape[1]} columns")
 
     def storage_elements(self) -> int:
         if self.fmt == "csr":
@@ -451,10 +481,15 @@ def spmv(
 
     ``format="auto"`` measures the matrix and picks CSR-ref / ELLPACK-R /
     pJDS / SELL-C-sigma (``select_format``); an explicit name forces the
-    format.  The converted device representation is cached, so repeated
-    ``spmv`` calls with the same host matrix convert once.
+    format.  A 2-D ``x`` of shape (n_cols, k) is dispatched to the
+    multi-RHS spMM path (``SparseDevice.matmat``), returning (n_rows, k).
+    The converted device representation is cached, so repeated ``spmv``
+    calls with the same host matrix convert once.
     ``convert_kwargs`` (b_r, diag_align, sigma, chunk_l, dtype) pass
     through to :func:`as_device`.
     """
     d = as_device(a, format, **convert_kwargs)
-    return d.matvec(jnp.asarray(x), backend=backend)
+    x = jnp.asarray(x)
+    if x.ndim == 2:
+        return d.matmat(x, backend=backend)
+    return d.matvec(x, backend=backend)

@@ -67,16 +67,22 @@ def pjds_matmat_kernel_call(
     """Y = A_pjds @ X (permuted basis).
 
     val/col_idx: (total_jds, b_r); chunk_map: (total_jds//chunk_l,) int32;
-    x: (n_cols_pad, n_rhs) with n_rhs % rhs_t == 0.
+    x: (n_cols_pad, n_rhs) with n_rhs % min(rhs_t, n_rhs) == 0 — the RHS
+    tile shrinks to n_rhs for narrow blocks (k < rhs_t), so small
+    multi-RHS counts (the distributed block solvers use k ~ 4) run as a
+    single tile instead of failing the alignment check.
     Returns (n_blocks * b_r, n_rhs) in the accumulator dtype.
     """
     total_jds, b_r = val.shape
     n_cols_pad, n_rhs = x.shape
+    dt = _acc_dtype(val.dtype, x.dtype)
+    if n_rhs == 0:                      # empty RHS block: nothing to do
+        return jnp.zeros((n_blocks * b_r, 0), dt)
+    rhs_t = min(rhs_t, n_rhs)
     if total_jds % chunk_l or n_rhs % rhs_t:
         raise ValueError("shapes not aligned to (chunk_l, rhs_t)")
     n_chunks = total_jds // chunk_l
     n_tiles = n_rhs // rhs_t
-    dt = _acc_dtype(val.dtype, x.dtype)
 
     y = pl.pallas_call(
         _pjds_spmm_kernel,

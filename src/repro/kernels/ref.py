@@ -66,9 +66,12 @@ def csr_matvec_ref(data: jax.Array, indices: jax.Array, row_ids: jax.Array,
                    x: jax.Array, n_rows: int) -> jax.Array:
     """CSR y = A x as a flat gather + segment-sum over the nnz stream —
     the dispatch layer's fallback for matrices too small/empty to be
-    worth a blocked format (no Pallas kernel: the irregular baseline)."""
+    worth a blocked format (no Pallas kernel: the irregular baseline).
+    ``x`` may carry a trailing RHS-block axis: (n,) or (n, k)."""
     dt = _acc_dtype(data.dtype, x.dtype)
-    contrib = data.astype(dt) * x[indices].astype(dt)
+    xg = x[indices].astype(dt)                 # (nnz,) or (nnz, k)
+    d = data.astype(dt)
+    contrib = d[:, None] * xg if xg.ndim == 2 else d * xg
     return jax.ops.segment_sum(contrib, row_ids, num_segments=n_rows)
 
 
@@ -76,12 +79,17 @@ def ell_matvec_ref(val: jax.Array, col_idx: jax.Array, rowlen: jax.Array,
                    x: jax.Array) -> jax.Array:
     """ELLPACK-R y = A x (paper Listing 1), jagged-diagonal-major layout.
 
-    val/col_idx: (max_nzr, n_pad); rowlen: (n_pad,); x: (n_pad_cols,).
+    val/col_idx: (max_nzr, n_pad); rowlen: (n_pad,); x: (n_pad_cols,) or
+    (n_pad_cols, k) for a block of RHS vectors.
     The rowlen mask reproduces ELLPACK-R semantics exactly (padded values
     are zero anyway, but masking keeps NaN/Inf padding safe).
     """
     dt = _acc_dtype(val.dtype, x.dtype)
     j = jnp.arange(val.shape[0], dtype=jnp.int32)[:, None]
     mask = j < rowlen[None, :]
-    contrib = jnp.where(mask, x[col_idx].astype(dt) * val.astype(dt), 0)
+    xg = x[col_idx].astype(dt)           # (max_nzr, n_pad[, k])
+    v = val.astype(dt)
+    if xg.ndim == 3:
+        v, mask = v[..., None], mask[..., None]
+    contrib = jnp.where(mask, xg * v, 0)
     return contrib.sum(axis=0)

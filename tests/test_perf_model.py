@@ -70,6 +70,23 @@ def test_t_mvm_t_link_crossover():
     assert t_m2 < 3 * t_l
 
 
+def test_t_link_gathered_prices_measured_halo():
+    """The gathered-halo link term charges only the referenced entries:
+    it agrees with t_link when the whole slice is referenced (plus the
+    LHS return leg t_link also counts) and vanishes for block-diagonal
+    partitions."""
+    n_loc, link = 10_000, 50e9
+    # halo == full slice in both directions ~ the t_link regime
+    full = PM.t_link_gathered(2 * n_loc, link, value_bytes=8)
+    assert full == pytest.approx(PM.t_link(n_loc, link, value_bytes=8))
+    # measured coupling of 80 entries: 2*n_loc/80 = 250x cheaper
+    sparse = PM.t_link_gathered(80, link, value_bytes=8)
+    assert sparse * 250 == pytest.approx(full)
+    assert PM.t_link_gathered(0, link) == 0.0
+    # multi-RHS scales linearly
+    assert PM.t_link_gathered(80, link, k=4) == pytest.approx(4 * sparse)
+
+
 def test_roofline_terms():
     r = PM.roofline_terms(hlo_flops=1e15, hlo_bytes=1e13,
                           collective_bytes=1e11, chips=256)

@@ -12,6 +12,16 @@ def _op(m, b_r=32):
     return p, (lambda x: ops.pjds_matvec(dev, x))
 
 
+def _block_op(m, b_r=32):
+    p = F.csr_to_pjds(m, b_r=b_r)
+    dev = ops.to_device_pjds(p)
+    return p, (lambda x: ops.pjds_matmat(dev, x))
+
+
+def _permute_cols(p, a):
+    return np.stack([p.permute(a[:, j]) for j in range(a.shape[1])], axis=1)
+
+
 def test_cg_poisson(rng):
     m = M.poisson_2d(20, 20)
     p, mv = _op(m)
@@ -47,6 +57,45 @@ def test_power_iteration(rng):
     _, lam = S.power_iteration(mv, v0, iters=500)
     dense_ev = np.linalg.eigvalsh(F.csr_to_dense(m))
     assert abs(float(lam) - dense_ev.max()) < 1e-2 * abs(dense_ev.max())
+
+
+def test_block_cg_matches_dense_solve(rng):
+    """Block-CG over the multi-RHS pJDS operator solves all k systems."""
+    m = M.poisson_2d(20, 20)
+    p, mm = _block_op(m)
+    k = 4
+    b = rng.standard_normal((m.n_rows, k)).astype(np.float32)
+    res = S.block_cg(mm, jnp.asarray(_permute_cols(p, b)),
+                     maxiter=1500, tol=1e-7)
+    assert float(np.max(np.asarray(res.residual))) < 1e-5
+    x = np.stack([p.unpermute(np.asarray(res.x)[:, j]) for j in range(k)],
+                 axis=1)
+    r = np.linalg.norm(F.csr_to_dense(m) @ x - b) / np.linalg.norm(b)
+    assert r < 1e-4
+
+
+def test_block_cg_fewer_iters_than_scalar_cg(rng):
+    """The block Krylov space is richer: block-CG needs fewer iterations
+    (i.e. fewer matrix streams) than any of the k scalar solves."""
+    m = M.poisson_2d(16, 16)
+    p, mm = _block_op(m)
+    _, mv = _op(m)
+    b = rng.standard_normal((m.n_rows, 4)).astype(np.float32)
+    res_blk = S.block_cg(mm, jnp.asarray(_permute_cols(p, b)),
+                         maxiter=800, tol=1e-6)
+    res_0 = S.cg(mv, jnp.asarray(p.permute(b[:, 0])), maxiter=800, tol=1e-6)
+    assert int(res_blk.iters) < int(res_0.iters)
+
+
+def test_block_lanczos_extremal_eigenvalue(rng):
+    m = M.poisson_2d(16, 16)
+    p, mm = _block_op(m)
+    v0 = rng.standard_normal((m.n_rows, 4)).astype(np.float32)
+    al, be = S.block_lanczos(mm, jnp.asarray(_permute_cols(p, v0)), m=20)
+    assert al.shape == (20, 4, 4) and be.shape == (20, 4, 4)
+    ev = S.block_tridiag_eigvals(al, be)
+    dense_ev = np.linalg.eigvalsh(F.csr_to_dense(m))
+    assert abs(ev.max() - dense_ev.max()) < 1e-3 * abs(dense_ev.max())
 
 
 def test_hmep_hamiltonian_lanczos(rng):
