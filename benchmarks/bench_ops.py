@@ -1,0 +1,91 @@
+"""Operator-wrapper overhead: what the SparseOperator abstraction costs.
+
+Three nested layers compute the same y = A x (jitted ref path — see
+bench_kernels on why CPU Pallas wall-time is not meaningful):
+
+* ``raw``      — the bare format matvec in the PERMUTED basis
+  (``ops.sell_matvec`` / ``ops.pjds_matvec`` on the inner operand): the
+  kernel alone, no basis restore for pjds.
+* ``device``   — ``SparseDevice.matvec``: + original-basis epilogue
+  (the unpermute gather for pjds; fused already for sell) + bounds
+  checks — the dispatch layer.
+* ``operator`` — ``operator(m) @ x``: + the custom_vjp application and
+  the protocol dispatch — the full DESIGN.md §8 surface.
+
+``operator/device`` is pure abstraction cost (should be ~1.0: the
+custom_vjp wrapper exists only at trace time); ``device/raw`` prices the
+basis restore.  An eager (un-jitted) ``op @ x`` row tracks the
+per-call Python dispatch the serving path pays when it cannot jit.
+Emits BENCH_ops.json for the perf trajectory.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import matrices as M
+from repro.core.operator import operator
+from repro.kernels import ops
+from .common import time_fn, csv_row, write_bench_json
+
+B_R = 128
+
+
+def _raw_fn(dev: ops.SparseDevice):
+    """The bare inner-format matvec (permuted basis where applicable)."""
+    inner = dev.dev
+    if dev.fmt == "sell":
+        return lambda v: ops.sell_matvec(inner, v)
+    if dev.fmt == "pjds":
+        return lambda v: ops.pjds_matvec(inner, v)
+    if dev.fmt == "ellpack_r":
+        return lambda v: ops.ell_matvec(inner, v)
+    return lambda v: ops.csr_matvec(inner, v)
+
+
+def _bench_matrix(name: str, m, rows, print_rows: bool) -> None:
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(m.shape[1]).astype(np.float32))
+    op = operator(m, b_r=B_R)
+    dev = op.dev
+
+    t_raw = time_fn(jax.jit(_raw_fn(dev)), x)
+    t_dev = time_fn(jax.jit(lambda v: dev.matvec(v)), x)
+    t_op = time_fn(jax.jit(lambda v: op @ v), x)
+
+    # eager per-call dispatch cost (no jit): the Python-side price
+    for _ in range(2):
+        jax.block_until_ready(op @ x)
+    t0 = time.perf_counter()
+    n_eager = 5
+    for _ in range(n_eager):
+        jax.block_until_ready(op @ x)
+    t_eager = (time.perf_counter() - t0) / n_eager
+
+    row = dict(kind="op_overhead", matrix=name, fmt=op.fmt,
+               t_raw_us=t_raw * 1e6, t_device_us=t_dev * 1e6,
+               t_operator_us=t_op * 1e6, t_eager_us=t_eager * 1e6,
+               wrapper_vs_device=t_op / t_dev,
+               device_vs_raw=t_dev / t_raw)
+    rows.append(row)
+    if print_rows:
+        print(csv_row(f"ops_{name}_{op.fmt}", t_op * 1e6,
+                      f"wrapper_vs_device={t_op/t_dev:.2f}x "
+                      f"device_vs_raw={t_dev/t_raw:.2f}x "
+                      f"eager={t_eager*1e6:.0f}us"))
+
+
+def run(print_rows=True):
+    rows = []
+    _bench_matrix("powerlaw", M.power_law(4096, seed=7), rows, print_rows)
+    _bench_matrix("sAMG", M.samg(scale=0.004), rows, print_rows)
+    _bench_matrix("poisson", M.poisson_2d(64, 64), rows, print_rows)
+    write_bench_json("ops", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

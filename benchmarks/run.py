@@ -16,19 +16,20 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table1,fig3,eq,scaling,kernels,sell,"
-                         "dist")
+                         "ops,dist")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from . import (bench_formats, bench_histograms, bench_perf_model,
                    bench_scaling, bench_kernels, bench_sell, bench_sparse_ffn,
-                   bench_dist)
+                   bench_ops, bench_dist)
     suites = [
         ("table1", bench_formats.run),      # paper Table 1
         ("fig3", bench_histograms.run),     # paper Fig. 3
         ("eq", bench_perf_model.run),       # paper Eq. 1-4
         ("kernels", bench_kernels.run),     # kernel study
         ("sell", bench_sell.run),           # SELL-C-sigma sigma sweep
+        ("ops", bench_ops.run),             # operator-wrapper overhead
         ("sparse_ffn", bench_sparse_ffn.run),  # beyond-paper: pJDS in LMs
         ("scaling", bench_scaling.run),     # paper Fig. 5
         ("dist", bench_dist.run),           # gathered vs full halo, spMM

@@ -2,17 +2,18 @@
 
 The paper's motivating workload (§1.3, and 'application of our results
 to a production-grade eigensolver' in the outlook): extremal eigenvalues
-of a sparse quantum Hamiltonian, where spMVM dominates the runtime and
-the whole Krylov iteration runs in the pJDS permuted basis (§2.1).
+of a sparse quantum Hamiltonian, where spMVM dominates the runtime.
+Since PR 3 the Krylov iteration runs against the SparseOperator
+protocol — ``operator(h)`` picks the storage format and keeps every
+permutation internal, so the solver sees the original basis end-to-end.
 
     PYTHONPATH=src python examples/eigensolver.py
 """
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.core import formats as F, matrices as M, solvers as S
-from repro.kernels import ops
+from repro.core.operator import operator
 
 
 def main():
@@ -22,17 +23,15 @@ def main():
     h = F.csr_from_dense(((d + d.T) / 2).astype(np.float32))
     print(f"Hamiltonian: {h.shape}, nnz={h.nnz}, N_nzr={h.n_nzr:.1f}")
 
-    pj = F.csr_to_pjds(h, b_r=128)
     print(f"pJDS vs ELLPACK reduction: "
           f"{100 * F.data_reduction_vs_ellpack(h):.1f}%")
-    dev = ops.to_device_pjds(pj)
-    mv = jax.jit(lambda v: ops.pjds_matvec(dev, v))
+    op = operator(h, b_r=128)
+    print(f"operator chose format={op.fmt!r}")
 
     rng = np.random.default_rng(0)
-    v0 = jnp.asarray(pj.permute(rng.standard_normal(h.n_rows)
-                                .astype(np.float32)))
-    # permute ONCE before the iteration, work permuted throughout (§2.1)
-    al, be = S.lanczos(mv, v0, m=100)
+    v0 = jnp.asarray(rng.standard_normal(h.n_rows).astype(np.float32))
+    # the operator hides the permuted basis — no permute/unpermute dance
+    al, be = S.lanczos(op, v0, m=100)
     ritz = S.tridiag_eigvals(al, be)
     print(f"Lanczos Ritz extremes: lam_min~{ritz.min():.4f} "
           f"lam_max~{ritz.max():.4f}")

@@ -1,4 +1,9 @@
-"""Quickstart: build a sparse matrix, convert to pJDS, run spMVM.
+"""Quickstart: wrap a sparse matrix as a SparseOperator, run y = A x.
+
+The operator protocol (DESIGN.md §8) hides storage format, permutation
+and padding: ``operator(m) @ x`` picks a format from row-length
+statistics, converts once, and computes in the original basis.  The
+same object gives the transpose (``op.T``) and gradients for free.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import formats as F, matrices as M, perf_model as PM
-from repro.kernels import ops
+from repro.core.operator import operator
 
 
 def main():
@@ -15,7 +20,7 @@ def main():
     m = M.samg(scale=0.002)
     print(f"matrix: {m.shape}, nnz={m.nnz}, N_nzr={m.n_nzr:.1f}")
 
-    # 2. Convert: ELLPACK pads to the global max row length; pJDS sorts
+    # 2. Storage: ELLPACK pads to the global max row length; pJDS sorts
     #    rows and pads per 128-row block (paper Fig. 1)
     ell = F.csr_to_ell(m, row_align=128)
     pjds = F.csr_to_pjds(m, b_r=128)
@@ -24,23 +29,35 @@ def main():
     print(f"data reduction: {100 * F.data_reduction_vs_ellpack(m):.1f}% "
           "(paper Table 1 measured 19-71% on its matrices)")
 
-    # 3. spMVM in the permuted basis (paper Listing 2)
+    # 3. The one-line API: a SparseOperator.  format="auto" prices the
+    #    candidates (DESIGN.md §5) and backend="auto" picks kernel/ref.
+    op = operator(m)
+    print(f"operator(m) chose format={op.fmt!r}, shape={op.shape}")
+
     rng = np.random.default_rng(0)
     x = rng.standard_normal(m.shape[0]).astype(np.float32)
-    dev = ops.to_device_pjds(pjds)
-    xp = jnp.asarray(pjds.permute(x))
-    y = pjds.unpermute(np.asarray(ops.pjds_matvec(dev, xp)))
+    y = np.asarray(op @ x)                       # original basis, y = A x
     y_ref = np.array([x[m.indices[m.indptr[i]:m.indptr[i + 1]]]
                       @ m.data[m.indptr[i]:m.indptr[i + 1]]
                       for i in range(m.n_rows)])
-    print(f"max |y - y_ref| = {np.abs(y - y_ref).max():.2e}")
+    print(f"max |op @ x - y_ref| = {np.abs(y - y_ref).max():.2e}")
 
-    # 4. Same through the Pallas TPU kernel (interpret mode on CPU)
-    y_k = pjds.unpermute(np.asarray(
-        ops.pjds_matvec(dev, xp, backend="kernel")))
-    print(f"pallas kernel max err = {np.abs(y_k - y_ref).max():.2e}")
+    # 4. The transpose view costs nothing to build: blocked formats run
+    #    A^T x as a scatter-accumulate over the same stored indices
+    yt = np.asarray(op.T @ y_ref)
+    yt_ref = F.csr_to_dense(m).T @ y_ref
+    scale = max(np.abs(yt_ref).max(), 1.0)
+    print(f"rel max |op.T @ y - ref| = "
+          f"{np.abs(yt - yt_ref).max() / scale:.2e}")
 
-    # 5. What the paper's model says about this matrix on an accelerator
+    # 5. And it is differentiable: jax.grad flows through the stored
+    #    values (op.with_values) and through x — d(w.Ax)/dx = A^T w
+    w = rng.standard_normal(m.shape[0]).astype(np.float32)
+    gx = jax.grad(lambda v: jnp.vdot(jnp.asarray(w), op @ v))(jnp.asarray(x))
+    print(f"grad wrt x == A^T w: max err = "
+          f"{np.abs(np.asarray(gx) - F.csr_to_dense(m).T @ w).max():.2e}")
+
+    # 6. What the paper's model says about this matrix on an accelerator
     lo, hi = PM.alpha_range(m.n_nzr)
     thresh = PM.n_nzr_upper_for_link_penalty(
         PM.TPU_V5E.hbm_bw, PM.TPU_V5E.ici_bw, alpha=lo)

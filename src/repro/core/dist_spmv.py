@@ -452,7 +452,16 @@ def make_dist_matvec(dist: DistPJDS, mesh: Mesh, axis: str = "data",
                      backend: ops.Backend = "ref",
                      halo: Halo = "gathered"):
     """Build a jit-able y = A x over a mesh axis.  x: (n_global_pad,)
-    sharded along ``axis``; returns y with the same sharding."""
+    sharded along ``axis``; returns y with the same sharding.
+
+    .. deprecated::
+        Kept as the raw closure under the operator protocol — new code
+        should build ``core.operator.dist_operator(m, mesh)`` instead,
+        which wraps this exact function and adds ``op.T`` (transposed
+        partition), ``diagonal()`` for Jacobi preconditioning, and
+        x-gradients.  ``backend="auto"`` resolves in
+        ``kernels.ops.resolve_backend``.
+    """
     return _make_dist_op(dist, mesh, axis, mode, backend, halo,
                          multi_rhs=False)
 
@@ -462,7 +471,12 @@ def make_dist_matmat(dist: DistPJDS, mesh: Mesh, axis: str = "data",
                      backend: ops.Backend = "ref",
                      halo: Halo = "gathered"):
     """Build a jit-able Y = A X for a block of RHS vectors.
-    X: (n_global_pad, k) sharded (axis, None); returns Y alike."""
+    X: (n_global_pad, k) sharded (axis, None); returns Y alike.
+
+    .. deprecated::
+        Shim — see :func:`make_dist_matvec`; prefer
+        ``core.operator.dist_operator(m, mesh).matmat``.
+    """
     return _make_dist_op(dist, mesh, axis, mode, backend, halo,
                          multi_rhs=True)
 

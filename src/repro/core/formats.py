@@ -57,6 +57,8 @@ __all__ = [
     "windowed_block_lengths",
     "estimate_storage_elements",
     "csr_remote_columns_by_distance",
+    "csr_transpose",
+    "csr_diagonal",
 ]
 
 _DEFAULT_BR = 128          # rows per pJDS block (lane dimension on TPU)
@@ -451,6 +453,37 @@ def _pjds_with_perm(
 
 def sell_to_dense(s: SELLMatrix) -> np.ndarray:
     return pjds_to_dense(s.pjds)
+
+
+# --------------------------------------------------------------------------
+# Transpose metadata (the operator protocol's rmatvec "device" path)
+# --------------------------------------------------------------------------
+def csr_transpose(m: CSRMatrix) -> CSRMatrix:
+    """A^T as a host CSR — i.e. the CSC view of ``m`` re-read as CSR.
+
+    This is the "CSC-of-blocks" build of the operator protocol: feeding
+    the result through the normal blocked converters gives a device
+    representation whose FORWARD kernels compute ``A^T x``, so the
+    transpose path reuses the gather-structured spMVM instead of a
+    scatter (DESIGN.md §8).
+    """
+    rows = np.repeat(np.arange(m.n_rows, dtype=np.int64), m.row_lengths())
+    return csr_from_coo(m.indices.astype(np.int64), rows, m.data,
+                        (m.n_cols, m.n_rows), sum_duplicates=False)
+
+
+def csr_diagonal(m: CSRMatrix) -> np.ndarray:
+    """diag(A) for a square CSR (missing entries are 0) — the Jacobi
+    preconditioner's input, extracted once host-side."""
+    if m.shape[0] != m.shape[1]:
+        raise ValueError("diagonal requires a square matrix")
+    d = np.zeros(m.n_rows, dtype=m.data.dtype)
+    rows = np.repeat(np.arange(m.n_rows, dtype=np.int64), m.row_lengths())
+    on_diag = m.indices == rows
+    # accumulate (not assign): duplicate (i, i) entries sum in matvec,
+    # so the diagonal must agree
+    np.add.at(d, rows[on_diag], m.data[on_diag])
+    return d
 
 
 # --------------------------------------------------------------------------

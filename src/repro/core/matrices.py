@@ -27,6 +27,7 @@ __all__ = [
     "TEST_MATRICES",
     "make_test_matrix",
     "poisson_2d",
+    "convection_poisson",
     "power_law",
 ]
 
@@ -196,6 +197,21 @@ def poisson_2d(nx: int = 64, ny: int = 64) -> CSRMatrix:
     rows = np.concatenate(rows_l); cols = np.concatenate(cols_l)
     vals = np.concatenate(vals_l)
     return csr_from_coo(rows, cols, vals, (n, n))
+
+
+def convection_poisson(nx: int = 64, ny: int = 64,
+                       beta: float = 0.5) -> CSRMatrix:
+    """Poisson + upwind convection skew on the fast-axis neighbors
+    (entries at col == row ± 1, which in ``poisson_2d`` exist only for
+    true grid neighbors): non-symmetric, with positive-definite
+    symmetric part for |beta| < 1 — the BiCGStab test operator."""
+    m = poisson_2d(nx, ny)
+    rows = np.repeat(np.arange(m.n_rows), np.diff(m.indptr))
+    cols = m.indices.astype(np.int64)
+    data = m.data.astype(np.float64).copy()
+    data[cols == rows + 1] += beta
+    data[cols == rows - 1] -= beta
+    return CSRMatrix(m.indptr, m.indices, data.astype(np.float32), m.shape)
 
 
 TEST_MATRICES = {

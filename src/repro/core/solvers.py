@@ -3,14 +3,24 @@
 The paper's motivation (§1.1): spMVM dominates sparse eigensolvers and
 linear solvers, and "for most iterative spMVM algorithms such as Krylov
 subspace methods, permutation of the indices needs to be done only before
-the start and after the end of the algorithm".  These solvers are written
-against an abstract ``matvec`` closure, so they run unchanged on:
+the start and after the end of the algorithm".  Every solver here takes
+``a`` as either a :class:`repro.core.operator.SparseOperator` or a bare
+``matvec`` closure (``_matvec_of`` normalizes), so ONE solver source runs
+unchanged on:
 
-* a single-device pJDS operator (``ops.pjds_matvec``), in the permuted
-  basis end-to-end, or
-* the distributed operator (``dist_spmv.make_dist_matvec``) over a mesh,
+* a single-device operator (``operator(m)`` — any storage format, in the
+  original basis), a hand-built matvec closure (e.g. the permuted-basis
+  pJDS closures the older tests use), or
+* the distributed operator (``dist_operator(m, mesh)``) over a mesh,
   with all vector arithmetic staying sharded (jnp elementwise ops and
   ``jnp.vdot`` lower to per-shard compute + all-reduce under pjit).
+
+``cg`` takes an optional preconditioner ``M`` (a callable ``z = M(r)``
+or the string ``"jacobi"``, which reads ``a.diagonal()`` — see
+:func:`jacobi`); ``bicgstab`` is the transpose-free non-symmetric
+solver, with the same ``M`` support.  Non-symmetric DUAL systems
+(``A^T y = c``) need no new code at all: pass ``op.T`` — the operator
+protocol's lazy transpose view — to any solver.
 
 All loops are ``jax.lax.while_loop`` / ``fori_loop`` so the whole solve
 is one compiled program (no host round-trips per iteration).
@@ -32,11 +42,84 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["cg", "CGResult", "lanczos", "power_iteration",
+__all__ = ["cg", "CGResult", "bicgstab", "BiCGStabResult", "jacobi",
+           "lanczos", "power_iteration",
            "block_cg", "BlockCGResult", "block_lanczos",
            "block_tridiag_eigvals"]
 
 MatVec = Callable[[jax.Array], jax.Array]
+Operator = "SparseOperator | MatVec"     # accepted by every solver
+
+
+def _matvec_of(a) -> MatVec:
+    """Normalize ``SparseOperator | MatVec`` to one apply callable.
+
+    Operators dispatch 1-D carriers to ``matvec`` and 2-D blocks to
+    ``matmat`` (the distributed operator shards the two differently);
+    bare closures pass through untouched — the pre-protocol call sites
+    keep working as shims.
+    """
+    mv = getattr(a, "matvec", None)
+    if mv is None:
+        return a
+    # One closure PER OPERATOR, cached on the instance: the closure is
+    # the jitted solvers' static cache key, so a fresh one per call
+    # would retrace + recompile every solve.
+    cached = getattr(a, "_solver_apply", None)
+    if cached is not None:
+        return cached
+    mm = getattr(a, "matmat", None)
+
+    def apply(x: jax.Array) -> jax.Array:
+        return mv(x) if x.ndim == 1 else mm(x)
+
+    try:
+        a._solver_apply = apply
+    except (AttributeError, TypeError):
+        pass
+    return apply
+
+
+def jacobi(a) -> MatVec:
+    """Jacobi (diagonal) preconditioner ``z = D^{-1} r`` from an
+    operator's ``diagonal()``.  Zero diagonal entries (e.g. the padded
+    tail of a distributed operator) pass through unscaled."""
+    d = getattr(a, "diagonal", None)
+    if d is None:
+        raise TypeError(
+            "jacobi needs a SparseOperator with .diagonal(); got "
+            f"{type(a).__name__} — pass M as an explicit callable instead")
+    cached = getattr(a, "_jacobi_precond", None)
+    if cached is not None:       # stable closure == stable jit cache key
+        return cached
+    diag = d()
+    inv = jnp.where(diag != 0, 1.0 / jnp.where(diag != 0, diag, 1), 1.0)
+    inv = inv.astype(diag.dtype)
+
+    def precond(r: jax.Array) -> jax.Array:
+        return r * (inv if r.ndim == 1 else inv[:, None])
+
+    try:
+        a._jacobi_precond = precond
+    except (AttributeError, TypeError):
+        pass
+    return precond
+
+
+def _identity(r: jax.Array) -> jax.Array:
+    """Module-level no-op preconditioner: a STABLE static jit key (a
+    fresh lambda per call would recompile the solver every time)."""
+    return r
+
+
+def _precond_of(M, a) -> MatVec | None:
+    if M is None:
+        return None
+    if M == "jacobi":
+        return jacobi(a)
+    if callable(M):
+        return M
+    raise TypeError(f"M must be None, 'jacobi' or a callable; got {M!r}")
 
 
 class CGResult(NamedTuple):
@@ -45,11 +128,28 @@ class CGResult(NamedTuple):
     residual: jax.Array
 
 
+def cg(a: Operator, b: jax.Array, x0: jax.Array | None = None,
+       maxiter: int = 500, tol: float = 1e-6, M=None) -> CGResult:
+    """(Preconditioned) conjugate gradients for SPD A.
+
+    ``a``: SparseOperator or matvec closure.  ``M``: optional
+    preconditioner — ``"jacobi"`` (diagonal, from ``a.diagonal()``) or a
+    callable ``z = M(r)`` approximating ``A^{-1} r``.  Convergence is
+    checked on the TRUE residual ||r|| / ||b||, so results with and
+    without M are directly comparable.
+    """
+    matvec = _matvec_of(a)
+    pre = _precond_of(M, a)
+    x0 = jnp.zeros_like(b) if x0 is None else x0
+    if pre is None:
+        return _cg(matvec, b, x0, maxiter, tol)
+    return _pcg(matvec, pre, b, x0, maxiter, tol)
+
+
 @functools.partial(jax.jit, static_argnums=(0, 3))
-def cg(matvec: MatVec, b: jax.Array, x0: jax.Array | None = None,
-       maxiter: int = 500, tol: float = 1e-6) -> CGResult:
-    """Conjugate gradients for SPD A (classic, unpreconditioned)."""
-    x = jnp.zeros_like(b) if x0 is None else x0
+def _cg(matvec: MatVec, b: jax.Array, x0: jax.Array,
+        maxiter: int = 500, tol: float = 1e-6) -> CGResult:
+    x = x0
     r = b - matvec(x)
     p = r
     rs = jnp.vdot(r, r)
@@ -73,11 +173,111 @@ def cg(matvec: MatVec, b: jax.Array, x0: jax.Array | None = None,
     return CGResult(x=x, iters=k, residual=jnp.sqrt(rs / b2))
 
 
-@functools.partial(jax.jit, static_argnums=(0, 2))
-def lanczos(matvec: MatVec, v0: jax.Array, m: int = 50):
+@functools.partial(jax.jit, static_argnums=(0, 1, 4))
+def _pcg(matvec: MatVec, precond: MatVec, b: jax.Array, x0: jax.Array,
+         maxiter: int = 500, tol: float = 1e-6) -> CGResult:
+    """Preconditioned CG: same recurrence with z = M r directions."""
+    x = x0
+    r = b - matvec(x)
+    z = precond(r)
+    p = z
+    rz = jnp.vdot(r, z)
+    rs = jnp.vdot(r, r)
+    b2 = jnp.maximum(jnp.vdot(b, b), 1e-30)
+
+    def cond(state):
+        _, _, _, _, rs, k = state
+        return (rs / b2 > tol ** 2) & (k < maxiter)
+
+    def body(state):
+        x, r, p, rz, rs, k = state
+        ap = matvec(p)
+        alpha = rz / jnp.vdot(p, ap)
+        x = x + alpha * p
+        r = r - alpha * ap
+        z = precond(r)
+        rz_new = jnp.vdot(r, z)
+        p = z + (rz_new / rz) * p
+        return x, r, p, rz_new, jnp.vdot(r, r), k + 1
+
+    x, r, p, rz, rs, k = jax.lax.while_loop(
+        cond, body, (x, r, p, rz, rs, jnp.int32(0)))
+    return CGResult(x=x, iters=k, residual=jnp.sqrt(rs / b2))
+
+
+class BiCGStabResult(NamedTuple):
+    x: jax.Array
+    iters: jax.Array
+    residual: jax.Array
+
+
+def bicgstab(a: Operator, b: jax.Array, x0: jax.Array | None = None,
+             maxiter: int = 1000, tol: float = 1e-6,
+             M=None) -> BiCGStabResult:
+    """BiCGStab (van der Vorst 1992) for general (non-symmetric) A.
+
+    Transpose-free: the recurrence itself never applies ``A^T`` — but
+    the DUAL system ``A^T y = c`` is solved by simply passing ``op.T``
+    (the protocol's lazy transpose view) as ``a``.  ``M`` as in
+    :func:`cg` (right preconditioning: A M z-directions).
+    """
+    matvec = _matvec_of(a)
+    pre = _precond_of(M, a) or _identity
+    x0 = jnp.zeros_like(b) if x0 is None else x0
+    return _bicgstab(matvec, pre, b, x0, maxiter, tol)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 4))
+def _bicgstab(matvec: MatVec, precond: MatVec, b: jax.Array, x0: jax.Array,
+              maxiter: int = 1000, tol: float = 1e-6) -> BiCGStabResult:
+    dt = b.dtype
+    tiny = jnp.asarray(1e-30, dt)
+
+    def _safe(d):
+        return jnp.where(jnp.abs(d) > tiny, d, tiny)
+
+    x = x0
+    r = b - matvec(x)
+    rhat = r                       # shadow residual, fixed
+    one = jnp.asarray(1.0, dt)
+    b2 = jnp.maximum(jnp.vdot(b, b), 1e-30)
+    state = (x, r, jnp.zeros_like(b), jnp.zeros_like(b),
+             one, one, one, jnp.vdot(r, r), jnp.int32(0))
+
+    def cond(state):
+        rs, k = state[-2], state[-1]
+        return (rs / b2 > tol ** 2) & (k < maxiter)
+
+    def body(state):
+        x, r, p, v, rho, alpha, omega, _rs, k = state
+        rho_new = jnp.vdot(rhat, r)
+        beta = (rho_new / _safe(rho)) * (alpha / _safe(omega))
+        p = r + beta * (p - omega * v)
+        p_hat = precond(p)
+        v = matvec(p_hat)
+        alpha = rho_new / _safe(jnp.vdot(rhat, v))
+        s = r - alpha * v
+        s_hat = precond(s)
+        t = matvec(s_hat)
+        omega = jnp.vdot(t, s) / _safe(jnp.vdot(t, t))
+        x = x + alpha * p_hat + omega * s_hat
+        r = s - omega * t
+        return (x, r, p, v, rho_new, alpha, omega, jnp.vdot(r, r), k + 1)
+
+    x, r, p, v, rho, alpha, omega, rs, k = jax.lax.while_loop(
+        cond, body, state)
+    return BiCGStabResult(x=x, iters=k, residual=jnp.sqrt(rs / b2))
+
+
+def lanczos(a: Operator, v0: jax.Array, m: int = 50):
     """m-step Lanczos: returns (alphas, betas) of the tridiagonal T_m.
     Eigenvalues of T_m approximate extremal eigenvalues of symmetric A —
     the Holstein-Hubbard (HMEp) use case of the paper's group."""
+    return _lanczos(_matvec_of(a), v0, m)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def _lanczos(matvec: MatVec, v0: jax.Array, m: int = 50):
     v = v0 / jnp.linalg.norm(v0)
 
     def body(carry, _):
@@ -103,26 +303,39 @@ class BlockCGResult(NamedTuple):
     residual: jax.Array   # (k,) per-column relative residual
 
 
+def _ridge(a: jax.Array) -> jax.Array:
+    """Tiny trace-relative ridge for the k-by-k Gram systems — shared by
+    block-CG and CholeskyQR so the two regularize identically."""
+    k = a.shape[0]
+    eps = jnp.asarray(jnp.finfo(a.dtype).eps, a.dtype)
+    scale = eps * (jnp.trace(a) / k) + jnp.asarray(1e-30, a.dtype)
+    return scale * jnp.eye(k, dtype=a.dtype)
+
+
 def _ridge_solve(a: jax.Array, b: jax.Array) -> jax.Array:
     """Solve the k-by-k system with a tiny trace-relative ridge so the
     block recurrences survive a column converging early (the Gram
     matrices go singular exactly when a residual column hits zero)."""
-    k = a.shape[0]
-    eps = jnp.asarray(jnp.finfo(a.dtype).eps, a.dtype)
-    ridge = eps * (jnp.trace(a) / k) + jnp.asarray(1e-30, a.dtype)
-    return jnp.linalg.solve(a + ridge * jnp.eye(k, dtype=a.dtype), b)
+    return jnp.linalg.solve(a + _ridge(a), b)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 3))
-def block_cg(matvec: MatVec, b: jax.Array, x0: jax.Array | None = None,
+def block_cg(a: Operator, b: jax.Array, x0: jax.Array | None = None,
              maxiter: int = 500, tol: float = 1e-6) -> BlockCGResult:
     """Block conjugate gradients (O'Leary 1980) for SPD A, k RHS at once.
 
-    b: (n, k).  ``matvec`` must accept (n, k) — e.g. the multi-RHS
-    distributed operator from ``dist_spmv.make_dist_matmat``.  Stops
-    when EVERY column's relative residual is below ``tol``.
+    b: (n, k).  ``a``: SparseOperator (its ``matmat`` runs the k systems
+    per matrix stream) or a closure accepting (n, k) — e.g. the legacy
+    ``dist_spmv.make_dist_matmat`` operator.  Stops when EVERY column's
+    relative residual is below ``tol``.
     """
-    x = jnp.zeros_like(b) if x0 is None else x0
+    return _block_cg(_matvec_of(a), b,
+                     jnp.zeros_like(b) if x0 is None else x0, maxiter, tol)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def _block_cg(matvec: MatVec, b: jax.Array, x0: jax.Array,
+              maxiter: int = 500, tol: float = 1e-6) -> BlockCGResult:
+    x = x0
     r = b - matvec(x)
     p = r
     rtr = r.T @ r                                     # (k, k)
@@ -154,19 +367,15 @@ def _chol_qr(w: jax.Array):
     """CholeskyQR: W = Q R with Q^T Q = I via the k-by-k Gram matrix —
     only matmuls and a k-by-k factorization, so it stays sharded along n
     (a tall-skinny QR would gather W).  Returns (Q, R upper)."""
-    k = w.shape[1]
     g = w.T @ w
-    eps = jnp.asarray(jnp.finfo(g.dtype).eps, g.dtype)
-    g = g + (eps * (jnp.trace(g) / k) + jnp.asarray(1e-30, g.dtype)) \
-        * jnp.eye(k, dtype=g.dtype)
+    g = g + _ridge(g)
     l = jnp.linalg.cholesky(g)                        # G = L L^T
     # Q = W L^{-T}:  solve L Y = W^T, Q = Y^T
     q = jax.scipy.linalg.solve_triangular(l, w.T, lower=True).T
     return q, l.T
 
 
-@functools.partial(jax.jit, static_argnums=(0, 2))
-def block_lanczos(matvec: MatVec, v0: jax.Array, m: int = 25):
+def block_lanczos(a: Operator, v0: jax.Array, m: int = 25):
     """m-step block Lanczos for symmetric A with block size k = v0.shape[1].
 
     Returns (A_blocks (m, k, k), B_blocks (m, k, k)) of the block
@@ -175,6 +384,11 @@ def block_lanczos(matvec: MatVec, v0: jax.Array, m: int = 25):
     faster per matrix pass than scalar Lanczos because every pass streams
     the matrix once for k directions (``block_tridiag_eigvals`` builds
     and solves T_m host-side)."""
+    return _block_lanczos(_matvec_of(a), v0, m)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def _block_lanczos(matvec: MatVec, v0: jax.Array, m: int = 25):
     v, _ = _chol_qr(v0)
     k = v.shape[1]
 
@@ -219,9 +433,13 @@ def tridiag_eigvals(alphas, betas):
     return np.linalg.eigvalsh(t)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 2))
-def power_iteration(matvec: MatVec, v0: jax.Array, iters: int = 100):
+def power_iteration(a: Operator, v0: jax.Array, iters: int = 100):
     """Dominant eigenpair via power iteration."""
+    return _power_iteration(_matvec_of(a), v0, iters)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def _power_iteration(matvec: MatVec, v0: jax.Array, iters: int = 100):
     def body(v, _):
         w = matvec(v)
         lam = jnp.vdot(v, w)

@@ -23,7 +23,9 @@ Two levels of API live here:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import hashlib
 import weakref
 from typing import Literal, Optional, Tuple, Union
 
@@ -58,10 +60,26 @@ __all__ = [
     "as_device",
     "spmv",
     "clear_device_cache",
+    "resolve_backend",
 ]
 
-Backend = Literal["kernel", "ref"]
+Backend = Literal["auto", "kernel", "ref"]
 FormatName = Literal["auto", "csr", "ellpack_r", "pjds", "sell"]
+
+
+def resolve_backend(backend: Backend) -> str:
+    """The one place ``backend="auto"`` is decided: the Pallas kernels on
+    TPU, the jnp refs everywhere else (on CPU the kernels only run in
+    interpret mode — Python per grid step — so the refs are the fast
+    path).  Explicit ``"kernel"``/``"ref"`` pass through untouched."""
+    if backend in ("kernel", "ref"):
+        return backend
+    if backend != "auto":
+        raise ValueError(f"unknown backend {backend!r}")
+    return "kernel" if jax.default_backend() == "tpu" else "ref"
+
+
+_resolve_backend = resolve_backend   # the satellite-task spelling
 
 
 @jax.tree_util.register_dataclass
@@ -209,7 +227,7 @@ def to_device_csr(m: F.CSRMatrix, dtype=None) -> CSRDevice:
 def pjds_matvec(a: PJDSDevice, x: jax.Array,
                 backend: Backend = "ref") -> jax.Array:
     """y = A x in the permuted basis; y has n_rows_pad entries."""
-    if backend == "kernel":
+    if resolve_backend(backend) == "kernel":
         return pjds_matvec_kernel_call(
             a.val, a.col_idx, a.chunk_map, x,
             n_blocks=a.n_blocks, chunk_l=a.chunk_l,
@@ -220,7 +238,7 @@ def pjds_matvec(a: PJDSDevice, x: jax.Array,
 def pjds_matmat(a: PJDSDevice, x: jax.Array, backend: Backend = "ref",
                 rhs_t: int = 128) -> jax.Array:
     """Y = A X; X: (n_cols_pad, n_rhs)."""
-    if backend == "kernel":
+    if resolve_backend(backend) == "kernel":
         return pjds_matmat_kernel_call(
             a.val, a.col_idx, a.chunk_map, x,
             n_blocks=a.n_blocks, chunk_l=a.chunk_l, rhs_t=rhs_t,
@@ -230,7 +248,7 @@ def pjds_matmat(a: PJDSDevice, x: jax.Array, backend: Backend = "ref",
 
 def ell_matvec(a: ELLDevice, x: jax.Array,
                backend: Backend = "ref") -> jax.Array:
-    if backend == "kernel":
+    if resolve_backend(backend) == "kernel":
         return ell_matvec_kernel_call(
             a.val, a.col_idx, a.tile_chunks, x,
             chunk_l=a.chunk_l, tile_r=a.tile_r,
@@ -242,7 +260,7 @@ def sell_matvec(a: SELLDevice, x: jax.Array,
                 backend: Backend = "ref") -> jax.Array:
     """y = A x with rows back in the ORIGINAL order (the window-local
     inverse permutation is fused); y has n_rows_pad entries."""
-    if backend == "kernel":
+    if resolve_backend(backend) == "kernel":
         return sell_matvec_kernel_call(
             a.val, a.col_idx, a.chunk_map, a.inv_perm, x,
             n_blocks=a.n_blocks, chunk_l=a.chunk_l,
@@ -314,6 +332,7 @@ def select_format(
     return min(candidates, key=candidates.get)
 
 
+@jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class SparseDevice:
     """A matrix ready for ``spmv``: one chosen format, converted once.
@@ -323,10 +342,14 @@ class SparseDevice:
     basis changes are internal.  Device arrays are cached per host
     matrix by ``as_device``; hold on to the wrapper (or keep the host
     matrix alive) to amortise conversion across calls.
+
+    Registered as a pytree (device arrays are the leaves) so it can flow
+    through ``jit`` / ``shard_map`` / ``lax.while_loop`` carriers — the
+    substrate the :mod:`repro.core.operator` protocol builds on.
     """
 
-    fmt: str
-    shape: Tuple[int, int]
+    fmt: str = dataclasses.field(metadata=dict(static=True))
+    shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
     dev: Union[PJDSDevice, ELLDevice, SELLDevice, CSRDevice]
     inv_perm: Optional[jax.Array]      # pjds only: undo the global row sort
 
@@ -334,8 +357,9 @@ class SparseDevice:
     def n_rows(self) -> int:
         return self.shape[0]
 
-    def matvec(self, x: jax.Array, backend: Backend = "ref") -> jax.Array:
+    def matvec(self, x: jax.Array, backend: Backend = "auto") -> jax.Array:
         """y = A x, original basis, length shape[0]."""
+        backend = resolve_backend(backend)
         if x.ndim == 2:
             return self.matmat(x, backend)
         self._check_cols(x)
@@ -350,13 +374,16 @@ class SparseDevice:
             return y_p[self.inv_perm][: self.n_rows]
         raise ValueError(f"unknown format {self.fmt!r}")
 
-    def matmat(self, x: jax.Array, backend: Backend = "ref") -> jax.Array:
+    def matmat(self, x: jax.Array, backend: Backend = "auto") -> jax.Array:
         """Y = A X for a block of RHS vectors, original basis.
 
         x: (n_cols, k) -> (shape[0], k).  The blocked formats ride the
         multi-RHS pJDS path (the storage layouts are identical, only the
-        row unpermute differs); CSR/ELLPACK use the generalized refs.
+        row unpermute differs) and honor ``backend``; CSR/ELLPACK have
+        no multi-RHS Pallas kernel, so they always use the generalized
+        refs — an explicit ``backend="kernel"`` falls back silently.
         """
+        backend = resolve_backend(backend)
         self._check_cols(x)
         if self.fmt == "csr":
             return R.csr_matvec_ref(self.dev.data, self.dev.indices,
@@ -375,6 +402,50 @@ class SparseDevice:
             return y_p[inv][: self.n_rows]
         raise ValueError(f"unknown format {self.fmt!r}")
 
+    def rmatvec(self, y: jax.Array, backend: Backend = "auto") -> jax.Array:
+        """x = A^T y, original basis: (shape[0],) -> (shape[1],).
+
+        The blocked formats run the transpose as a scatter-accumulate
+        over their stored column indices (``ref.blocked_rmatvec_ref``);
+        CSR swaps the roles of its gather and its segment ids.  For a
+        kernel-speed transpose build the CSC-of-blocks device operand
+        instead (``core.operator.operator(a, transpose="device")``).
+        """
+        # the transpose refs handle 1-D and 2-D y with one code path
+        return self.rmatmat(y, backend)
+
+    def rmatmat(self, y: jax.Array, backend: Backend = "auto") -> jax.Array:
+        """X = A^T Y, original basis: (shape[0][, k]) -> (shape[1][, k])."""
+        del backend    # scatter path only; see operator(transpose="device")
+        self._check_rows(y)
+        n_cols = self.shape[1]
+        if self.fmt == "csr":
+            return R.csr_rmatvec_ref(self.dev.data, self.dev.indices,
+                                     self.dev.row_ids, y, n_cols)
+        if self.fmt == "ellpack_r":
+            y_pad = self._pad_rows(y, self.dev.val.shape[1])
+            return R.ell_rmatvec_ref(self.dev.val, self.dev.col_idx,
+                                     self.dev.rowlen, y_pad, n_cols)
+        if self.fmt in ("sell", "pjds"):
+            d = self.dev
+            inv = d.inv_perm if self.fmt == "sell" else self.inv_perm
+            y_p = self._scatter_to_storage(y, inv)
+            return R.blocked_rmatvec_ref(d.val, d.col_idx, d.row_block,
+                                         y_p, n_cols)
+        raise ValueError(f"unknown format {self.fmt!r}")
+
+    def _pad_rows(self, y: jax.Array, n_pad: int) -> jax.Array:
+        pad = [(0, n_pad - self.n_rows)] + [(0, 0)] * (y.ndim - 1)
+        return jnp.pad(y[: self.n_rows], pad)
+
+    def _scatter_to_storage(self, y: jax.Array, inv_perm) -> jax.Array:
+        """Inverse of the matvec epilogue ``y_p[inv_perm][:n_rows]``:
+        place y's entries at their storage (permuted) positions, zeros in
+        the padded rows (whose stored values are zero anyway)."""
+        n_pad = inv_perm.shape[0]
+        y_p = jnp.zeros((n_pad,) + y.shape[1:], y.dtype)
+        return y_p.at[inv_perm[: self.n_rows]].set(y[: self.n_rows])
+
     def _check_cols(self, x: jax.Array) -> None:
         n = x.shape[0] if x.ndim == 2 else x.shape[-1]
         if n < self.shape[1]:
@@ -382,6 +453,11 @@ class SparseDevice:
             # return garbage instead of failing.
             raise ValueError(
                 f"x has {n} entries; matrix has {self.shape[1]} columns")
+
+    def _check_rows(self, y: jax.Array) -> None:
+        if y.shape[0] < self.shape[0]:
+            raise ValueError(
+                f"y has {y.shape[0]} entries; matrix has {self.shape[0]} rows")
 
     def storage_elements(self) -> int:
         if self.fmt == "csr":
@@ -395,9 +471,32 @@ class SparseDevice:
 # and the stored weakref is re-checked on hit.
 _DEVICE_CACHE: dict = {}
 
+# Dense ndarray inputs can't be id-cached (callers rebuild them freely),
+# so they get a small content-addressed LRU: (shape, dtype, byte digest)
+# -> the converted CSRMatrix.  Returning the SAME CSR object for equal
+# content lets the id-keyed device cache above hit too, closing the hole
+# where every dense call silently reconverted from scratch.
+_DENSE_CSR_CACHE: "collections.OrderedDict" = collections.OrderedDict()
+_DENSE_CSR_CACHE_MAX = 16
+
+
+def _dense_to_csr_cached(a: np.ndarray) -> F.CSRMatrix:
+    key = (a.shape, a.dtype.str,
+           hashlib.sha1(np.ascontiguousarray(a).tobytes()).hexdigest())
+    hit = _DENSE_CSR_CACHE.get(key)
+    if hit is not None:
+        _DENSE_CSR_CACHE.move_to_end(key)
+        return hit
+    m = F.csr_from_dense(a)
+    _DENSE_CSR_CACHE[key] = m
+    while len(_DENSE_CSR_CACHE) > _DENSE_CSR_CACHE_MAX:
+        _DENSE_CSR_CACHE.popitem(last=False)
+    return m
+
 
 def clear_device_cache() -> None:
     _DEVICE_CACHE.clear()
+    _DENSE_CSR_CACHE.clear()
 
 
 def _cache_put(key, m, dev) -> None:
@@ -420,9 +519,16 @@ def as_device(
 ) -> SparseDevice:
     """Wrap a matrix as a :class:`SparseDevice`, converting at most once.
 
-    ``a`` may be a host CSRMatrix, a dense ndarray (converted to CSR
-    first — pass CSRMatrix to benefit from caching), or an existing
-    SparseDevice (returned unchanged; ``format`` must agree or be auto).
+    ``a`` may be a host CSRMatrix, a dense ndarray (content-hashed into a
+    small LRU, so repeated calls with equal data reuse one conversion),
+    or an existing SparseDevice (returned unchanged; ``format`` must
+    agree or be auto).
+
+    This is the conversion/caching layer under the operator protocol —
+    new code should usually go one level up and call
+    ``repro.core.operator.operator(a)``, which adds transpose,
+    ``__matmul__`` and autodiff on top of the device representation
+    built here (DESIGN.md §8).
     """
     if isinstance(a, SparseDevice):
         if format not in ("auto", a.fmt):
@@ -430,7 +536,7 @@ def as_device(
                 f"matrix already converted to {a.fmt!r}; asked for {format!r}")
         return a
     if isinstance(a, np.ndarray):
-        a = F.csr_from_dense(a)
+        a = _dense_to_csr_cached(a)
     if not isinstance(a, F.CSRMatrix):
         raise TypeError(f"cannot dispatch on {type(a)}")
 
@@ -474,22 +580,27 @@ def spmv(
     a: Union[F.CSRMatrix, np.ndarray, SparseDevice],
     x: jax.Array,
     format: FormatName = "auto",
-    backend: Backend = "ref",
+    backend: Backend = "auto",
     **convert_kwargs,
 ) -> jax.Array:
     """y = A x through the unified dispatch layer (original basis).
 
+    .. deprecated::
+        ``spmv`` is kept as a thin shim over the operator protocol:
+        ``spmv(a, x)`` == ``operator(a) @ x`` (``repro.core.operator``).
+        New code should build the operator once and reuse it — it adds
+        ``.T``, ``rmatvec`` and ``jax.grad`` support that this function
+        does not expose.
+
     ``format="auto"`` measures the matrix and picks CSR-ref / ELLPACK-R /
     pJDS / SELL-C-sigma (``select_format``); an explicit name forces the
-    format.  A 2-D ``x`` of shape (n_cols, k) is dispatched to the
-    multi-RHS spMM path (``SparseDevice.matmat``), returning (n_rows, k).
-    The converted device representation is cached, so repeated ``spmv``
-    calls with the same host matrix convert once.
-    ``convert_kwargs`` (b_r, diag_align, sigma, chunk_l, dtype) pass
-    through to :func:`as_device`.
+    format.  ``backend="auto"`` resolves in :func:`resolve_backend`.  A
+    2-D ``x`` of shape (n_cols, k) is dispatched to the multi-RHS spMM
+    path, returning (n_rows, k).  The converted device representation is
+    cached, so repeated ``spmv`` calls with the same host matrix convert
+    once.  ``convert_kwargs`` (b_r, diag_align, sigma, chunk_l, dtype)
+    pass through to :func:`as_device`.
     """
-    d = as_device(a, format, **convert_kwargs)
-    x = jnp.asarray(x)
-    if x.ndim == 2:
-        return d.matmat(x, backend=backend)
-    return d.matvec(x, backend=backend)
+    from repro.core.operator import operator as _operator
+    op = _operator(a, format=format, backend=backend, **convert_kwargs)
+    return op @ jnp.asarray(x)

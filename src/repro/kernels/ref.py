@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["pjds_matvec_ref", "pjds_matmat_ref", "ell_matvec_ref",
-           "sell_matvec_ref", "csr_matvec_ref"]
+           "sell_matvec_ref", "csr_matvec_ref",
+           "csr_rmatvec_ref", "ell_rmatvec_ref", "blocked_rmatvec_ref"]
 
 
 def _acc_dtype(*dts):
@@ -73,6 +74,51 @@ def csr_matvec_ref(data: jax.Array, indices: jax.Array, row_ids: jax.Array,
     d = data.astype(dt)
     contrib = d[:, None] * xg if xg.ndim == 2 else d * xg
     return jax.ops.segment_sum(contrib, row_ids, num_segments=n_rows)
+
+
+def csr_rmatvec_ref(data: jax.Array, indices: jax.Array, row_ids: jax.Array,
+                    y: jax.Array, n_cols: int) -> jax.Array:
+    """CSR x = A^T y via the SWAPPED gather: read y along rows, scatter-
+    accumulate along columns (segment ids = the column stream).  ``y``
+    may carry a trailing RHS-block axis: (n_rows,) or (n_rows, k)."""
+    dt = _acc_dtype(data.dtype, y.dtype)
+    yg = y[row_ids].astype(dt)                 # (nnz,) or (nnz, k)
+    d = data.astype(dt)
+    contrib = d[:, None] * yg if yg.ndim == 2 else d * yg
+    return jax.ops.segment_sum(contrib, indices, num_segments=n_cols)
+
+
+def ell_rmatvec_ref(val: jax.Array, col_idx: jax.Array, rowlen: jax.Array,
+                    y: jax.Array, n_cols: int) -> jax.Array:
+    """ELLPACK-R x = A^T y: per-entry scatter-accumulate into the column
+    space.  y: (n_pad,) or (n_pad, k) in STORAGE row order."""
+    dt = _acc_dtype(val.dtype, y.dtype)
+    j = jnp.arange(val.shape[0], dtype=jnp.int32)[:, None]
+    mask = j < rowlen[None, :]
+    v = jnp.where(mask, val, 0).astype(dt)
+    contrib = v[..., None] * y.astype(dt)[None, :] if y.ndim == 2 \
+        else v * y.astype(dt)[None, :]
+    flat = contrib.reshape(-1, *contrib.shape[2:])
+    return jax.ops.segment_sum(flat, col_idx.reshape(-1),
+                               num_segments=n_cols)
+
+
+def blocked_rmatvec_ref(val: jax.Array, col_idx: jax.Array,
+                        row_block: jax.Array, y: jax.Array,
+                        n_cols: int) -> jax.Array:
+    """pJDS/SELL x = A^T y: the transpose of the blocked gather is a
+    scatter-accumulate over ``col_idx`` (rows read from y at the entry's
+    permuted row position).  y: (n_rows_pad,) or (n_rows_pad, k) in the
+    PERMUTED (storage) basis."""
+    b_r = val.shape[1]
+    dt = _acc_dtype(val.dtype, y.dtype)
+    rows = row_block[:, None] * b_r + jnp.arange(b_r, dtype=jnp.int32)[None]
+    yg = y[rows].astype(dt)                    # (total_jds, b_r[, k])
+    v = val.astype(dt)
+    contrib = v[..., None] * yg if yg.ndim == 3 else v * yg
+    flat = contrib.reshape(-1, *contrib.shape[2:])
+    return jax.ops.segment_sum(flat, col_idx.reshape(-1),
+                               num_segments=n_cols)
 
 
 def ell_matvec_ref(val: jax.Array, col_idx: jax.Array, rowlen: jax.Array,

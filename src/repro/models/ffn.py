@@ -4,6 +4,12 @@
 paper's storage format as a first-class LM feature (see ``repro.sparse``).
 The dense path is what the dry-run/roofline exercises; SparseFFN is an
 inference-time compression demonstrated by examples and benchmarks.
+
+``ffn_apply`` also accepts a param dict whose leaves are
+``SparseLinear`` operators (``sparse.sparsify_ffn_params``): the sparse
+layers are registered pytrees, so such params flow through ``jit``
+unchanged — any unstacked FFN call site can be swapped to blocked-sparse
+storage without touching the model code around it.
 """
 from __future__ import annotations
 
@@ -28,6 +34,10 @@ def ffn_init(key, cfg, dtype, d_ff: int | None = None) -> C.Init:
 
 
 def ffn_apply(p, cfg, x):
+    if not isinstance(p["w1"], dict):
+        # SparseLinear leaves: the operator-protocol spMM path
+        from repro.sparse.sparse_ffn import sparse_ffn_apply
+        return shard(sparse_ffn_apply(p, cfg, x), "batch", None, None)
     act = C.activation(cfg.act)
     h = C.dense_apply(p["w1"], x)
     h = shard(h, "batch", None, "model")

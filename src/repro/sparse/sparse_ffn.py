@@ -1,9 +1,9 @@
-"""SparseFFN: pruned FFN weights in blocked sparse storage + spMM.
+"""SparseFFN: pruned FFN weights as a differentiable SparseOperator.
 
 The paper's storage format promoted to a first-class LM feature
 (DESIGN.md §4): magnitude-prune a trained FFN to ``density``, convert the
 surviving weights to SELL-C-sigma (default) or pJDS, and run the forward
-pass as multi-RHS spMVM.
+pass as multi-RHS spMVM through the operator protocol (DESIGN.md §8).
 
 Format choice rides the unified dispatch layer (DESIGN.md §5): with
 ``format="sell"`` rows — i.e. output features — are sorted only inside
@@ -14,6 +14,15 @@ SELL and pJDS — for multi-RHS spMM the unpermute amortises over the T
 RHS columns while padding multiplies by T, so minimum storage wins and
 the window is kept only when it is free.
 
+Since PR 3 each :class:`SparseLinear` wraps a
+``repro.core.operator.DeviceOperator`` and is itself a registered
+pytree, so sparse layers sit inside param trees, flow through ``jit``
+(e.g. the serving engine's decode step), and are TRAINABLE end-to-end:
+the operator's ``custom_vjp`` makes ``jax.grad`` flow into the stored
+values, with the pruned sparsity pattern fixed —
+
+    g = jax.grad(lambda v: loss(sl.with_values(v)(x)))(sl.values)
+
 Memory story (the paper's Table-1 argument, on LM weights): an FFN with
 density d stores ~d * (4+4)/2 bytes per original bf16 element (f32 value
 + int32 index, halved... see ``memory_summary``), so densities below ~1/6
@@ -22,32 +31,52 @@ ELLPACK) stays <1% even though per-row non-zero counts after magnitude
 pruning vary wildly — exactly the row-length-variance regime (Fig. 3)
 pJDS/SELL were designed for.
 
-This module is single-device (inference compression); the distributed
-dry-run path uses dense FFN.
+This module is single-device (inference compression / fine-tuning); the
+distributed dry-run path uses dense FFN.
 """
 from __future__ import annotations
-
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import formats as F
+from repro.core.operator import DeviceOperator, operator
 from repro.kernels import ops
 
 
-@dataclasses.dataclass
+@jax.tree_util.register_pytree_node_class
 class SparseLinear:
-    """y = x @ W with W^T stored blocked-sparse (rows = output features)."""
+    """y = x @ W with W^T stored blocked-sparse (rows = output features),
+    applied through a :class:`DeviceOperator`.  A registered pytree: the
+    device arrays (values + indices) are the leaves."""
 
-    a: ops.PJDSDevice
-    inv_perm: jax.Array       # (n_out,) sorted position of each output feature
-    fmt: str                  # "sell" | "pjds"
-    sigma: int                # sort window (n_rows_pad for pjds)
-    n_out: int
-    n_in_pad: int
-    density: float
+    def __init__(self, op: DeviceOperator, n_out: int, n_in_pad: int,
+                 sigma: int, density: float):
+        self.op = op
+        self.n_out = n_out
+        self.n_in_pad = n_in_pad
+        self.sigma = sigma
+        self.density = density
+
+    @property
+    def fmt(self) -> str:
+        return self.op.fmt
+
+    @property
+    def a(self):
+        """The inner blocked device operand (storage accounting)."""
+        return self.op.dev.dev
+
+    @property
+    def values(self) -> jax.Array:
+        """The stored (pruned) weights — the trainable parameters."""
+        return self.op.values
+
+    def with_values(self, val: jax.Array) -> "SparseLinear":
+        """Same sparsity pattern, new stored values (the grad handle)."""
+        return SparseLinear(self.op.with_values(val), self.n_out,
+                            self.n_in_pad, self.sigma, self.density)
 
     @staticmethod
     def from_dense(w: np.ndarray, density: float, b_r: int = 128,
@@ -70,27 +99,22 @@ class SparseLinear:
                                                  chunk_l, sigma)
             pjds_e = F.estimate_storage_elements(rl, "pjds", b_r, chunk_l)
             format = "sell" if sell_e <= pjds_e else "pjds"
-        if format == "sell":
-            s = F.csr_to_sell(csr, c=b_r, sigma=sigma, diag_align=chunk_l,
-                              permuted_cols=False)
-            pj, sig = s.pjds, s.sigma
-        elif format == "pjds":
-            pj = F.csr_to_pjds(csr, b_r=b_r, diag_align=chunk_l,
-                               permuted_cols=False)
-            sig = pj.n_rows_pad
-        else:
+        if format not in ("sell", "pjds"):
             raise ValueError(f"unknown format {format!r}")
+        op = operator(csr, format=format, b_r=b_r, diag_align=chunk_l,
+                      chunk_l=chunk_l, sigma=sigma)
+        sig = op.dev.dev.sigma if format == "sell" \
+            else op.dev.dev.n_rows_pad
         return SparseLinear(
-            a=ops.to_device_pjds(pj, chunk_l=chunk_l),
-            inv_perm=jnp.asarray(pj.inv_perm[:n_out]),
-            fmt=format,
-            sigma=sig,
+            op=op,
             n_out=n_out,
             n_in_pad=_pad(n_in, 1),
+            sigma=sig,
             density=float((wp != 0).mean()),
         )
 
-    def __call__(self, x: jax.Array, backend: ops.Backend = "ref") -> jax.Array:
+    def __call__(self, x: jax.Array,
+                 backend: ops.Backend | None = None) -> jax.Array:
         """x: (..., n_in) -> (..., n_out)."""
         lead = x.shape[:-1]
         n_in = x.shape[-1]
@@ -98,10 +122,9 @@ class SparseLinear:
         t = xt.shape[1]
         t_pad = _pad(t, 128)
         xt = jnp.pad(xt, ((0, 0), (0, t_pad - t)))
-        y_perm = ops.pjds_matmat(self.a, xt, backend=backend)  # (rows_pad, T)
-        # rows back to output-feature order: window-local gather for SELL,
-        # global gather for pJDS — never a scatter.
-        y = y_perm[self.inv_perm]
+        # the operator hides format, permutation and padding: (n_out, T)
+        # back in output-feature order, differentiable through values & x
+        y = self.op.matmat(xt, backend=backend)
         return y[:, :t].T.reshape(*lead, self.n_out).astype(x.dtype)
 
     def memory_summary(self, dense_bytes_per_el: int = 2) -> dict:
@@ -112,9 +135,17 @@ class SparseLinear:
                 "ratio_vs_dense": stored / dense,
                 "padding_overhead": stored / max(csr_min, 1) - 1.0}
 
+    # -- pytree ------------------------------------------------------------
+    def tree_flatten(self):
+        return (self.op,), (self.n_out, self.n_in_pad, self.sigma,
+                            self.density)
 
-def ops_storage_bytes(a: ops.PJDSDevice, value_bytes: int = 4,
-                      index_bytes: int = 4) -> int:
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+
+def ops_storage_bytes(a, value_bytes: int = 4, index_bytes: int = 4) -> int:
     return int(a.val.size) * (value_bytes + index_bytes) \
         + int(a.chunk_map.size) * 4
 
@@ -134,7 +165,7 @@ def sparsify_ffn_params(ffn_params: dict, density: float,
 
 
 def sparse_ffn_apply(sp: dict, cfg, x: jax.Array,
-                     backend: ops.Backend = "ref") -> jax.Array:
+                     backend: ops.Backend | None = None) -> jax.Array:
     from repro.models.common import activation
     act = activation(cfg.act)
     h = sp["w1"](x, backend)

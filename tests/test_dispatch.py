@@ -107,6 +107,24 @@ def test_conversion_cache_reuses_device_rep(rng):
     assert ops.as_device(m, "auto", b_r=B_R) is d1
 
 
+def test_dense_input_hits_conversion_cache(rng):
+    """A dense ndarray is content-hashed: equal data (even a different
+    array object) reuses one CSR conversion AND one device conversion —
+    previously every dense call silently reconverted."""
+    a = _uniform(rng, 96)
+    d1 = ops.as_device(a, "auto", b_r=B_R)
+    d2 = ops.as_device(a.copy(), "auto", b_r=B_R)   # equal bytes, new object
+    assert d1 is d2
+    # different content -> different entry
+    b = a.copy()
+    b[0, 0] += 1.0
+    assert ops.as_device(b, "auto", b_r=B_R) is not d1
+    # spmv over dense input rides the same cache
+    x = rng.standard_normal(96).astype(np.float32)
+    ops.spmv(a.copy(), x, b_r=B_R)
+    assert ops.as_device(a, "auto", b_r=B_R) is d1
+
+
 def test_tiny_and_empty_fall_back_to_csr(rng):
     tiny = F.csr_from_dense(_uniform(rng, 16))
     assert ops.select_format(tiny, b_r=B_R) == "csr"

@@ -56,6 +56,35 @@ def test_sparse_ffn_full_block(rng):
                                rtol=1e-3)
 
 
+def test_sparse_linear_is_pytree_and_jits(rng):
+    """SparseLinear params flow through jit like dense weights — the
+    serving engine's decode step carries them as pytree leaves."""
+    w = rng.standard_normal((96, 160)).astype(np.float32)
+    sl = SparseLinear.from_dense(w, 0.2, b_r=32)
+    x = jnp.asarray(rng.standard_normal((3, 96)).astype(np.float32))
+    leaves, treedef = jax.tree_util.tree_flatten(sl)
+    sl2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    np.testing.assert_array_equal(np.asarray(sl(x)), np.asarray(sl2(x)))
+    y_jit = jax.jit(lambda layer, xx: layer(xx))(sl, x)
+    np.testing.assert_allclose(np.asarray(y_jit), np.asarray(sl(x)),
+                               atol=1e-5)
+
+
+def test_ffn_apply_dispatches_sparse_params(rng):
+    """models.ffn.ffn_apply accepts SparseLinear leaves in place of the
+    dense w-dicts (density=1 keeps every weight -> matches dense)."""
+    from repro import configs
+    from repro.models import ffn as FF
+    cfg = configs.smoke("qwen2.5-14b")
+    p, _ = FF.ffn_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((2, 4, cfg.d_model)), jnp.float32)
+    sp = sparsify_ffn_params(p, density=1.0)
+    y = FF.ffn_apply(sp, cfg, x)
+    dense_y = FF.ffn_apply(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(dense_y),
+                               atol=1e-3, rtol=1e-3)
+
+
 @settings(max_examples=8, deadline=None)
 @given(seed=st.integers(0, 9999), density=st.floats(0.05, 0.9))
 def test_sparse_linear_property(seed, density):
