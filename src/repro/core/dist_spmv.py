@@ -119,6 +119,10 @@ class DistPJDS:
                               # ordered as halo_distances(halo_w)
     n_rows: int = dataclasses.field(metadata=dict(static=True))  # unpadded
     sigma: int = dataclasses.field(metadata=dict(static=True))   # sort window
+    loc_max_chunks: int = dataclasses.field(
+        default=None, metadata=dict(static=True))  # prefetched-grid ceilings
+    rem_max_chunks: int = dataclasses.field(
+        default=None, metadata=dict(static=True))
 
     @property
     def n_global_pad(self) -> int:
@@ -193,6 +197,7 @@ def partition_csr(
     chunk_l: int = 8,
     halo_w: int | None = None,
     sigma: int | None = None,
+    index_dtype="auto",
 ) -> DistPJDS:
     """Row-partition a global CSR onto ``n_dev`` devices as :class:`DistPJDS`.
 
@@ -209,6 +214,14 @@ def partition_csr(
     ``sigma`` bounds the per-device row-sort window (SELL-C-sigma style;
     default 8*b_r).  ``sigma >= n_loc`` recovers the device-local global
     sort, i.e. per-device pJDS.
+
+    ``index_dtype="auto"`` compresses the stored column-index streams:
+    the local operand addresses only its n_loc-column slice and the
+    remote operand only the (2*halo_w+1)*n_loc ext buffer, so the row
+    partition STRUCTURALLY bounds the index span — int16 indices
+    whenever the per-device slice fits, however large the global matrix
+    is.  This is where the paper's distributed scaling and the
+    compressed-stream work compound.
     """
     if m.shape[0] != m.shape[1]:
         raise ValueError("distributed spMVM expects a square matrix")
@@ -268,33 +281,53 @@ def partition_csr(
         # y stays window-local.
         total_rl = loc.row_lengths() + rem.row_lengths()
         perm = F.windowed_sort_perm(total_rl, sig)
-        pj_loc = F._pjds_with_perm(loc, perm, b_r, diag_align, False)
-        pj_rem = F._pjds_with_perm(rem, perm, b_r, diag_align, False)
+        pj_loc = F._pjds_with_perm(loc, perm, b_r, diag_align, False,
+                                   index_dtype)
+        pj_rem = F._pjds_with_perm(rem, perm, b_r, diag_align, False,
+                                   index_dtype)
         locs.append(ops.to_device_pjds(pj_loc, chunk_l))
         rems.append(ops.to_device_pjds(pj_rem, chunk_l))
         inv = np.empty(n_loc, dtype=np.int32)
         inv[perm] = np.arange(n_loc, dtype=np.int32)
         invs.append(inv)
 
-    def _stack(devs, attr):
+    def _stack(devs, attr, edge=False):
+        # Devices pad to one shared leading extent.  Values/columns pad
+        # with ZERO (the padding sentinel: phantom chunks contribute
+        # nothing); chunk/row block maps pad with their LAST entry so
+        # they stay non-decreasing — the prefetched kernels derive the
+        # per-block chunk extents from them by binary search.
         arrs = [np.asarray(getattr(d, attr)) for d in devs]
         longest = max(a.shape[0] for a in arrs)
         out = []
         for a in arrs:
             pad = [(0, longest - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
-            out.append(np.pad(a, pad))
+            out.append(np.pad(a, pad, mode="edge" if edge else "constant"))
         return jnp.asarray(np.stack(out))
 
     n_blocks = n_loc // b_r
+
+    def _max_chunks(devs) -> int:
+        # Static per-block chunk ceiling ACROSS devices, including the
+        # phantom chunks the shared-extent padding appends to each
+        # device's last block.
+        longest = max(int(d.chunk_map.shape[0]) for d in devs)
+        mx = 1
+        for d in devs:
+            cm = np.asarray(d.chunk_map)
+            cm = np.pad(cm, (0, longest - len(cm)), mode="edge")
+            mx = max(mx, int(np.bincount(cm, minlength=1).max()))
+        return mx
+
     return DistPJDS(
         loc_val=_stack(locs, "val"),
         loc_col=_stack(locs, "col_idx"),
-        loc_chunk_map=_stack(locs, "chunk_map"),
-        loc_row_block=_stack(locs, "row_block"),
+        loc_chunk_map=_stack(locs, "chunk_map", edge=True),
+        loc_row_block=_stack(locs, "row_block", edge=True),
         rem_val=_stack(rems, "val"),
         rem_col=_stack(rems, "col_idx"),
-        rem_chunk_map=_stack(rems, "chunk_map"),
-        rem_row_block=_stack(rems, "row_block"),
+        rem_chunk_map=_stack(rems, "chunk_map", edge=True),
+        rem_row_block=_stack(rems, "row_block", edge=True),
         inv_perm=jnp.asarray(np.stack(invs)),
         send_idx=jnp.asarray(send_idx),
         recv_idx=jnp.asarray(recv_idx),
@@ -307,6 +340,8 @@ def partition_csr(
         halo_lens=halo_lens,
         n_rows=m.n_rows,
         sigma=sig,
+        loc_max_chunks=_max_chunks(locs),
+        rem_max_chunks=_max_chunks(rems),
     )
 
 
@@ -314,10 +349,10 @@ def partition_csr(
 # The shard_map'd operator
 # --------------------------------------------------------------------------
 def _local_spmv(val, col, chunk_map, row_block, x, n_blocks, b_r, chunk_l,
-                backend):
+                backend, max_chunks=None):
     a = ops.PJDSDevice(val=val, col_idx=col, chunk_map=chunk_map,
                        row_block=row_block, n_blocks=n_blocks, b_r=b_r,
-                       chunk_l=chunk_l)
+                       chunk_l=chunk_l, max_chunks=max_chunks)
     if x.ndim == 2:
         return ops.pjds_matmat(a, x, backend=backend)
     return ops.pjds_matvec(a, x, backend=backend)
@@ -372,9 +407,14 @@ def dist_matvec_local(dist: DistPJDS, x_blk: jax.Array, *, axis: str,
     operand leaves of ``dist`` carry a leading length-1 device axis (from
     shard_map)."""
     sq = lambda a: a[0]
-    spmv = functools.partial(_local_spmv, n_blocks=dist.n_blocks,
-                             b_r=dist.b_r, chunk_l=dist.chunk_l,
-                             backend=backend)
+    loc_spmv = functools.partial(_local_spmv, n_blocks=dist.n_blocks,
+                                 b_r=dist.b_r, chunk_l=dist.chunk_l,
+                                 backend=backend,
+                                 max_chunks=dist.loc_max_chunks)
+    rem_spmv = functools.partial(_local_spmv, n_blocks=dist.n_blocks,
+                                 b_r=dist.b_r, chunk_l=dist.chunk_l,
+                                 backend=backend,
+                                 max_chunks=dist.rem_max_chunks)
     loc_args = (sq(dist.loc_val), sq(dist.loc_col), sq(dist.loc_chunk_map),
                 sq(dist.loc_row_block))
     rem_args = (sq(dist.rem_val), sq(dist.rem_col), sq(dist.rem_chunk_map),
@@ -397,22 +437,22 @@ def dist_matvec_local(dist: DistPJDS, x_blk: jax.Array, *, axis: str,
     if no_halo:
         # Block-diagonal partition: nothing crosses the network, so every
         # mode degenerates to the local kernel alone.
-        y = spmv(*loc_args, x_blk)
+        y = loc_spmv(*loc_args, x_blk)
     elif mode == "vector":
         # comm, then (implicitly fused) full spMVM — bulk synchronous.
         ext = exchange(x_blk)
         ext, x_dep = jax.lax.optimization_barrier((ext, x_blk))
-        y = spmv(*loc_args, x_dep) + spmv(*rem_args, ext)
+        y = loc_spmv(*loc_args, x_dep) + rem_spmv(*rem_args, ext)
     elif mode == "naive":
         # local kernel first, comm strictly after (no async progress).
-        y_loc = spmv(*loc_args, x_blk)
+        y_loc = loc_spmv(*loc_args, x_blk)
         x_after, _ = jax.lax.optimization_barrier((x_blk, y_loc))
-        y = y_loc + spmv(*rem_args, exchange(x_after))
+        y = y_loc + rem_spmv(*rem_args, exchange(x_after))
     elif mode == "overlap":
         # task mode: halo and local kernel are independent -> overlapped.
         ext = exchange(x_blk)
-        y_loc = spmv(*loc_args, x_blk)
-        y = y_loc + spmv(*rem_args, ext)
+        y_loc = loc_spmv(*loc_args, x_blk)
+        y = y_loc + rem_spmv(*rem_args, ext)
     else:
         raise ValueError(mode)
     # undo the device-local row sort

@@ -59,10 +59,61 @@ __all__ = [
     "csr_remote_columns_by_distance",
     "csr_transpose",
     "csr_diagonal",
+    "PAD_COL",
+    "min_index_dtype",
+    "resolve_index_dtype",
+    "assert_padding_invariant",
 ]
 
 _DEFAULT_BR = 128          # rows per pJDS block (lane dimension on TPU)
 _DEFAULT_DIAG_ALIGN = 8    # jagged-diagonal padding (sublane dimension)
+
+# ----------------------------------------------------------------------
+# Padding sentinel (audited end-to-end; see assert_padding_invariant).
+#
+# Every blocked format pads its val/col_idx arrays.  The invariant is:
+#
+#   padded entries store  val == 0  AND  col_idx == PAD_COL (== 0).
+#
+# PAD_COL is an IN-RANGE column, so the kernels' RHS gather reads x[0]
+# for padded lanes without masking; correctness comes from val == 0
+# (the product contributes nothing to the accumulator).  This is what
+# lets every kernel and ref skip per-entry masks on the hot path, and
+# it must survive index compression: PAD_COL == 0 is representable in
+# any index dtype.  Code that rewrites stored values (e.g.
+# ``operator.with_values``) must preserve the zeros in padded slots.
+# ----------------------------------------------------------------------
+PAD_COL = 0
+
+# When True every converter audits its freshly built arrays (numpy-level,
+# O(stored elements)).  Enabled in debug builds (i.e. unless python runs
+# with -O); flip module-globally to force either way.
+PAD_AUDIT = bool(__debug__)
+
+
+def min_index_dtype(span: int) -> np.dtype:
+    """Narrowest signed integer dtype that can address columns
+    ``[0, span)``.  int16 covers spans up to 2**15 — comfortably the
+    per-device column slices the distributed partitioner produces —
+    otherwise int32."""
+    return np.dtype(np.int16) if span <= 2 ** 15 else np.dtype(np.int32)
+
+
+def resolve_index_dtype(index_dtype, span: int) -> np.dtype:
+    """Resolve an ``index_dtype`` build argument: ``"auto"`` compresses
+    to :func:`min_index_dtype`; an explicit dtype is validated against
+    the addressable span (a lossy narrowing is a build error, not a
+    silent wrap)."""
+    if index_dtype == "auto":
+        return min_index_dtype(span)
+    dt = np.dtype(index_dtype)
+    if dt.kind != "i":
+        raise ValueError(f"index_dtype must be a signed integer; got {dt}")
+    if span > np.iinfo(dt).max + 1:
+        raise ValueError(
+            f"index_dtype {dt} cannot address {span} columns "
+            f"(max span {np.iinfo(dt).max + 1})")
+    return dt
 
 
 # --------------------------------------------------------------------------
@@ -183,19 +234,24 @@ def csr_to_ell(
     m: CSRMatrix,
     row_align: int = _DEFAULT_BR,
     diag_align: int = _DEFAULT_DIAG_ALIGN,
+    index_dtype="auto",
 ) -> ELLMatrix:
     rl = m.row_lengths()
     max_nzr = _pad_to(max(int(rl.max(initial=0)), 1), diag_align)
     n_pad = _pad_to(m.n_rows, row_align)
+    idt = resolve_index_dtype(index_dtype, m.shape[1])
     val = np.zeros((max_nzr, n_pad), dtype=m.data.dtype)
-    col = np.zeros((max_nzr, n_pad), dtype=np.int32)
+    col = np.full((max_nzr, n_pad), PAD_COL, dtype=idt)
     for i in range(m.n_rows):
         lo, hi = m.indptr[i], m.indptr[i + 1]
         val[: hi - lo, i] = m.data[lo:hi]
         col[: hi - lo, i] = m.indices[lo:hi]
     rowlen = np.zeros(n_pad, dtype=np.int32)
     rowlen[: m.n_rows] = rl
-    return ELLMatrix(val, col, rowlen, m.shape, n_pad)
+    e = ELLMatrix(val, col, rowlen, m.shape, n_pad)
+    if PAD_AUDIT:
+        assert_padding_invariant(e)
+    return e
 
 
 def ell_to_dense(e: ELLMatrix) -> np.ndarray:
@@ -269,57 +325,16 @@ def csr_to_pjds(
     b_r: int = _DEFAULT_BR,
     diag_align: int = _DEFAULT_DIAG_ALIGN,
     permuted_cols: bool = True,
+    index_dtype="auto",
 ) -> PJDSMatrix:
-    if permuted_cols and m.shape[0] != m.shape[1]:
-        raise ValueError("symmetric permutation requires a square matrix")
     rl = m.row_lengths()
     n_pad = _pad_to(m.n_rows, b_r)
     rl_pad = np.zeros(n_pad, dtype=np.int64)
     rl_pad[: m.n_rows] = rl
     # "sort" step (Fig. 1): stable sort by descending row length.
     perm = np.argsort(-rl_pad, kind="stable").astype(np.int32)
-    inv_perm = np.empty_like(perm)
-    inv_perm[perm] = np.arange(n_pad, dtype=np.int32)
-
-    n_blocks = n_pad // b_r
-    sorted_rl = rl_pad[perm]
-    # "pad" step: block-local max, rounded up to full sublanes.
-    block_len = np.zeros(n_blocks, dtype=np.int32)
-    for b in range(n_blocks):
-        blk = sorted_rl[b * b_r : (b + 1) * b_r]
-        block_len[b] = _pad_to(max(int(blk.max(initial=0)), 1), diag_align)
-    block_start = np.zeros(n_blocks + 1, dtype=np.int32)
-    np.cumsum(block_len, out=block_start[1:])
-    total = int(block_start[-1])
-
-    val = np.zeros((total, b_r), dtype=m.data.dtype)
-    col = np.zeros((total, b_r), dtype=np.int32)
-    for b in range(n_blocks):
-        s = block_start[b]
-        for r in range(b_r):
-            p = b * b_r + r           # sorted position
-            orig = perm[p]
-            if orig >= m.n_rows:
-                continue
-            lo, hi = m.indptr[orig], m.indptr[orig + 1]
-            cols_r = m.indices[lo:hi]
-            if permuted_cols:
-                cols_r = inv_perm[cols_r]
-            val[s : s + (hi - lo), r] = m.data[lo:hi]
-            col[s : s + (hi - lo), r] = cols_r
-    return PJDSMatrix(
-        val=val,
-        col_idx=col,
-        block_start=block_start,
-        block_len=block_len,
-        rowlen=sorted_rl.astype(np.int32),
-        perm=perm,
-        inv_perm=inv_perm,
-        shape=m.shape,
-        b_r=b_r,
-        n_rows_pad=n_pad,
-        permuted_cols=permuted_cols,
-    )
+    return _pjds_with_perm(m, perm, b_r, diag_align, permuted_cols,
+                           index_dtype)
 
 
 def pjds_to_dense(p: PJDSMatrix) -> np.ndarray:
@@ -381,6 +396,7 @@ def csr_to_sell(
     sigma: int | None = None,
     diag_align: int = _DEFAULT_DIAG_ALIGN,
     permuted_cols: bool = True,
+    index_dtype="auto",
 ) -> SELLMatrix:
     if sigma is None:
         sigma = 8 * c
@@ -392,7 +408,7 @@ def csr_to_sell(
     # Reuse the pJDS constructor machinery by faking the sort: build a CSR
     # with rows pre-permuted, convert with an identity-sort guarantee, then
     # compose permutations.
-    pj = _pjds_with_perm(m, perm, c, diag_align, permuted_cols)
+    pj = _pjds_with_perm(m, perm, c, diag_align, permuted_cols, index_dtype)
     return SELLMatrix(pjds=pj, sigma=sigma)
 
 
@@ -402,6 +418,7 @@ def _pjds_with_perm(
     b_r: int,
     diag_align: int,
     permuted_cols: bool,
+    index_dtype="auto",
 ) -> PJDSMatrix:
     """pJDS blocking with an externally supplied row permutation."""
     if permuted_cols and m.shape[0] != m.shape[1]:
@@ -421,8 +438,12 @@ def _pjds_with_perm(
     block_start = np.zeros(n_blocks + 1, dtype=np.int32)
     np.cumsum(block_len, out=block_start[1:])
     total = int(block_start[-1])
+    # With a symmetric permutation the stored indices live in the PERMUTED
+    # column space, whose addressable span is the padded row count.
+    idt = resolve_index_dtype(index_dtype,
+                              n_pad if permuted_cols else m.shape[1])
     val = np.zeros((total, b_r), dtype=m.data.dtype)
-    col = np.zeros((total, b_r), dtype=np.int32)
+    col = np.full((total, b_r), PAD_COL, dtype=idt)
     for b in range(n_blocks):
         s = block_start[b]
         for r in range(b_r):
@@ -435,8 +456,8 @@ def _pjds_with_perm(
             if permuted_cols:
                 cols_r = inv_perm[cols_r]
             val[s : s + (hi - lo), r] = m.data[lo:hi]
-            col[s : s + (hi - lo), r] = cols_r
-    return PJDSMatrix(
+            col[s : s + (hi - lo), r] = cols_r.astype(idt)
+    pj = PJDSMatrix(
         val=val,
         col_idx=col,
         block_start=block_start,
@@ -449,6 +470,9 @@ def _pjds_with_perm(
         n_rows_pad=n_pad,
         permuted_cols=permuted_cols,
     )
+    if PAD_AUDIT:
+        assert_padding_invariant(pj)
+    return pj
 
 
 def sell_to_dense(s: SELLMatrix) -> np.ndarray:
@@ -514,6 +538,48 @@ def csr_remote_columns_by_distance(
 
 
 # --------------------------------------------------------------------------
+# Padding-sentinel audit
+# --------------------------------------------------------------------------
+def _check_pad(name: str, val_pad: np.ndarray, col_pad: np.ndarray) -> None:
+    if val_pad.size and np.any(val_pad != 0):
+        raise AssertionError(
+            f"{name}: padded entries carry non-zero values — the unmasked "
+            f"kernels would add them into y")
+    if col_pad.size and np.any(col_pad != PAD_COL):
+        raise AssertionError(
+            f"{name}: padded entries carry column != PAD_COL ({PAD_COL}) — "
+            f"the RHS gather would touch arbitrary (possibly stale-halo) "
+            f"entries of x")
+
+
+def assert_padding_invariant(fmt) -> None:
+    """Audit the padding sentinel invariant (see :data:`PAD_COL`): every
+    padded slot of a blocked format must store ``val == 0`` and
+    ``col_idx == PAD_COL``.  Raises AssertionError on violation.  Called
+    by the converters when :data:`PAD_AUDIT` is set (debug builds);
+    callable directly on any format object."""
+    if isinstance(fmt, SELLMatrix):
+        fmt = fmt.pjds
+    if isinstance(fmt, ELLMatrix):
+        j = np.arange(fmt.val.shape[0])[:, None]
+        pad = j >= fmt.rowlen[None, :]
+        _check_pad("ELLMatrix", fmt.val[pad], fmt.col_idx[pad])
+        return
+    if isinstance(fmt, PJDSMatrix):
+        for b in range(fmt.n_blocks):
+            s, e = int(fmt.block_start[b]), int(fmt.block_start[b + 1])
+            rl = fmt.rowlen[b * fmt.b_r : (b + 1) * fmt.b_r]  # sorted order
+            j = np.arange(e - s)[:, None]
+            pad = j >= rl[None, :]
+            _check_pad(f"PJDSMatrix block {b}", fmt.val[s:e][pad],
+                       fmt.col_idx[s:e][pad])
+        return
+    if isinstance(fmt, CSRMatrix):
+        return              # CSR stores no padding
+    raise TypeError(type(fmt))
+
+
+# --------------------------------------------------------------------------
 # Memory accounting (paper Table 1, "data reduction" column)
 # --------------------------------------------------------------------------
 def storage_elements(fmt) -> int:
@@ -530,8 +596,22 @@ def storage_elements(fmt) -> int:
     raise TypeError(type(fmt))
 
 
-def format_nbytes(fmt, value_bytes: int = 8, index_bytes: int = 4) -> int:
-    """Total footprint: values + column indices + per-format metadata."""
+def format_nbytes(fmt, value_bytes: int | None = None,
+                  index_bytes: int | None = None) -> int:
+    """Total footprint: values + column indices + per-format metadata.
+
+    ``value_bytes`` / ``index_bytes`` default to the widths ACTUALLY
+    stored (so an int16-index / bf16-value build reports its compressed
+    footprint); pass explicit widths to price a hypothetical storage
+    precision instead."""
+    if isinstance(fmt, SELLMatrix):
+        return format_nbytes(fmt.pjds, value_bytes, index_bytes)
+    if value_bytes is None:
+        value_bytes = (fmt.data if isinstance(fmt, CSRMatrix)
+                       else fmt.val).dtype.itemsize
+    if index_bytes is None:
+        index_bytes = (fmt.indices if isinstance(fmt, CSRMatrix)
+                       else fmt.col_idx).dtype.itemsize
     e = storage_elements(fmt)
     base = e * (value_bytes + index_bytes)
     if isinstance(fmt, CSRMatrix):
@@ -540,8 +620,6 @@ def format_nbytes(fmt, value_bytes: int = 8, index_bytes: int = 4) -> int:
         return base + fmt.n_rows_pad * 4          # rowlen (ELLPACK-R)
     if isinstance(fmt, PJDSMatrix):
         return base + (fmt.n_blocks + 1) * 4 + fmt.n_rows_pad * 4  # col_start + perm
-    if isinstance(fmt, SELLMatrix):
-        return format_nbytes(fmt.pjds, value_bytes, index_bytes)
     raise TypeError(type(fmt))
 
 

@@ -449,7 +449,12 @@ def operator(
     ``SparseDevice``, or already an operator (returned unchanged).
     Conversion and caching ride :func:`kernels.ops.as_device`;
     ``format``/``convert_kwargs`` (b_r, diag_align, sigma, chunk_l,
-    dtype) pass through.  ``transpose="device"`` additionally converts
+    dtype, index_dtype, x_tiles) pass through — in particular
+    ``dtype=jnp.bfloat16`` stores a compressed bf16 value stream (f32
+    accumulation; ``op.dtype`` reports the storage dtype, results come
+    back f32) and ``index_dtype="auto"`` (the default) compresses the
+    column indices to int16 whenever the column span fits.
+    ``transpose="device"`` additionally converts
     ``A^T`` (``formats.csr_transpose`` — the CSC-of-blocks build) so
     ``op.T @ x`` runs the forward kernels; the default ``"ref"`` serves
     transposes from the scatter-accumulate refs with no extra storage.
@@ -497,6 +502,7 @@ def dist_operator(
     chunk_l: int = 8,
     halo_w: Optional[int] = None,
     sigma: Optional[int] = None,
+    index_dtype="auto",
 ) -> DistOperator:
     """Partition ``m`` over ``mesh[axis]`` as a :class:`DistOperator`.
 
@@ -505,18 +511,23 @@ def dist_operator(
     ``op.T``, x-gradients and Jacobi preconditioning work distributed;
     ``transpose=None`` skips the second partition.  Passing an existing
     ``DistPJDS`` wraps it as-is (no transpose, no diagonal).
+    ``index_dtype="auto"`` stores int16 column indices whenever the
+    per-device slice spans fit (they are structurally bounded by the
+    row partition — see ``dist_spmv.partition_csr``).
     """
     if isinstance(m, D.DistPJDS):
         return DistOperator(m, mesh, axis=axis, mode=mode, backend=backend,
                             halo=halo)
     n_dev = mesh.shape[axis]
     dist = D.partition_csr(m, n_dev, b_r=b_r, diag_align=diag_align,
-                           chunk_l=chunk_l, halo_w=halo_w, sigma=sigma)
+                           chunk_l=chunk_l, halo_w=halo_w, sigma=sigma,
+                           index_dtype=index_dtype)
     t_dist = None
     if transpose == "device":
         t_dist = D.partition_csr(F.csr_transpose(m), n_dev, b_r=b_r,
                                  diag_align=diag_align, chunk_l=chunk_l,
-                                 halo_w=None, sigma=sigma)
+                                 halo_w=None, sigma=sigma,
+                                 index_dtype=index_dtype)
     elif transpose is not None:
         raise ValueError(f"transpose must be 'device' or None; "
                          f"got {transpose!r}")

@@ -134,13 +134,37 @@ def spmvm_flops(nnz: int) -> int:
 
 def spmvm_bytes(stored_elements: int, n_rows: int, alpha: float,
                 n_nzr: float, value_bytes: int = 8,
-                index_bytes: int = 4) -> float:
+                index_bytes: int = 4, x_tiles: int = 1,
+                n_row_blocks: int = 1,
+                vec_bytes: int | None = None) -> float:
     """Minimum HBM traffic of one spMVM in a given format: matrix values +
-    indices stream once; RHS traffic scales with alpha; LHS written once."""
+    indices stream once; RHS traffic scales with alpha; LHS written once.
+
+    ``value_bytes``/``index_bytes`` are the STORED matrix widths, so a
+    bf16-value / int16-index build is priced at its compressed stream
+    (the whole point of the compressed formats: bytes/nnz drops from
+    4+4 to 2+2 before padding).  ``vec_bytes`` is the width of the
+    RHS/LHS vectors, which do NOT compress with the matrix — a bf16
+    build still reads f32 x and writes the f32 accumulator — and
+    defaults to at least f32 (``max(4, value_bytes)``).
+
+    ``x_tiles > 1`` prices the column-blocked-x kernel grid
+    (row block, x tile, chunk): the matrix stream is re-read once per x
+    tile, and the RHS — no longer resident — is re-read once per row
+    block (``n_row_blocks``) instead of once, replacing the alpha term.
+    The model makes the trade explicit: column blocking buys a bounded
+    VMEM footprint with strictly more HBM traffic, so dispatch only
+    reaches for it when x cannot be resident at all."""
+    if vec_bytes is None:
+        vec_bytes = max(4, value_bytes)
+    if x_tiles > 1:
+        rhs = n_row_blocks * n_rows * vec_bytes        # x re-read per block
+    else:
+        rhs = alpha * n_nzr * n_rows * vec_bytes       # resident: alpha term
     return (
-        stored_elements * (value_bytes + index_bytes)
-        + alpha * n_nzr * n_rows * value_bytes
-        + 2 * n_rows * value_bytes
+        x_tiles * stored_elements * (value_bytes + index_bytes)
+        + rhs
+        + 2 * n_rows * vec_bytes
     )
 
 
@@ -163,16 +187,23 @@ def predicted_spmv_seconds(stored_elements: int, n_rows: int, n_nzr: float,
                            irregular_factor: float = 1.0,
                            spec: TPUSpec = TPU_V5E,
                            value_bytes: int = 4,
-                           index_bytes: int = 4) -> float:
+                           index_bytes: int = 4,
+                           x_tiles: int = 1,
+                           n_row_blocks: int = 1,
+                           vec_bytes: int | None = None) -> float:
     """Memory-bound time estimate of one spMVM in a candidate format —
     the quantity ``kernels.ops.select_format`` minimises.  Uses the
     enforced alpha -> 1/N_nzr limit (VMEM-resident RHS, DESIGN.md §2);
     ``irregular_factor`` derates formats without a blocked kernel (CSR's
-    scalar gather stream cannot saturate HBM)."""
+    scalar gather stream cannot saturate HBM).  ``value_bytes`` /
+    ``index_bytes`` are the STORED stream widths, ``vec_bytes`` the
+    uncompressed RHS/LHS width, and ``x_tiles`` / ``n_row_blocks``
+    price the column-blocked-x grid — see :func:`spmvm_bytes`."""
     n_nzr = max(n_nzr, 1e-9)
     alpha = 1.0 / n_nzr
     b = spmvm_bytes(stored_elements, n_rows, alpha, n_nzr,
-                    value_bytes, index_bytes)
+                    value_bytes, index_bytes, x_tiles, n_row_blocks,
+                    vec_bytes)
     return (b * irregular_factor + perm_bytes) / spec.hbm_bw
 
 

@@ -1,0 +1,73 @@
+"""Shared backend plumbing for the Pallas kernels.
+
+Lives below ``kernels.ops`` (which imports the kernel modules) so the
+kernels themselves can resolve defaults without a circular import;
+``ops.resolve_backend`` / ``ops.resolve_interpret`` re-export these as
+the public spellings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["resolve_interpret", "acc_dtype", "chunk_clamp", "tile_contrib",
+           "pad_x_to_tiles"]
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """The one place the kernels' ``interpret`` default is decided:
+    ``None`` (the default everywhere) means *compiled* Pallas on TPU and
+    interpret mode elsewhere (CPU/GPU lack a Mosaic backend, interpret
+    is the only way the kernels run there at all).  An explicit bool is
+    the escape hatch — e.g. ``interpret=True`` on TPU to debug a kernel
+    with host prints."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+def acc_dtype(*dts):
+    """Accumulator dtype rule shared by every kernel and ref: sub-f32
+    value/RHS streams (bf16/f16 storage) accumulate — and return — in
+    f32; f32/f64 stay put.  Low-precision STORAGE never means
+    low-precision ARITHMETIC."""
+    r = jnp.result_type(*dts)
+    if r in (jnp.bfloat16, jnp.float16):
+        return jnp.float32
+    return r
+
+
+def chunk_clamp(c, cnt):
+    """Clamp a grid chunk index to a block's last REAL chunk — the shared
+    piece of every prefetched BlockSpec index map: steps past the block's
+    extent keep DMA'ing the same tile (no new transfer) while the kernel
+    body's ``pl.when`` skips their compute.  The inner max guards blocks
+    whose chunk count is 0 (all-empty ELLPACK-R tiles)."""
+    return jnp.minimum(c, jnp.maximum(cnt - 1, 0))
+
+
+def tile_contrib(val, idx, x, t, x_t, x_tiles, dt):
+    """Per-entry contribution ``val * x[idx]`` of one (chunk_l, b_r) tile
+    against the resident x tile ``t`` — the shared body of the blocked
+    spMV kernels.  With one tile (resident x) it is a plain gather; with
+    a column-blocked x the gather is masked to the tile's column range
+    (entries outside contribute 0 this sweep and are picked up by their
+    own tile)."""
+    if x_tiles == 1:
+        return val.astype(dt) * x[idx].astype(dt)
+    lo = t * x_t
+    loc = jnp.clip(idx - lo, 0, x_t - 1)
+    hit = (idx >= lo) & (idx < lo + x_t)
+    return jnp.where(hit, val.astype(dt) * x[loc].astype(dt), 0)
+
+
+def pad_x_to_tiles(x: jax.Array, x_tiles: int):
+    """Zero-pad a 1-D RHS to a multiple of ``x_tiles`` (kernel tiling
+    needs equal tiles; stored column indices never reach the pad, and a
+    padded lane's gather is masked or multiplied by a zero value).
+    Returns (padded x, tile length)."""
+    n = x.shape[0]
+    rem = n % x_tiles
+    if rem:
+        x = jnp.pad(x, (0, x_tiles - rem))
+    return x, x.shape[0] // x_tiles

@@ -4,16 +4,21 @@ TPU adaptation of paper Listing 1 — the baseline the paper improves on.
 
 Layout: ``val``/``col_idx`` are ``(max_nzr, n_pad)`` jagged-diagonal-major
 (the paper's ``val[j*N + i]``), tiled as (chunk_l sublanes, tile_r lanes).
+``col_idx`` may be an int16 compressed stream; ``val`` may be bf16 (f32
+accumulation), same contract as the blocked kernels.
 
 ELLPACK-R semantics on TPU: the *storage* is padded to the global max row
 length (that is ELLPACK's deficiency the paper fixes), but the *compute*
 skips whole tiles whose rows are all shorter than the current jagged
-diagonal — ``tile_chunks`` (SMEM) holds the per-row-tile chunk count, the
-tile-granular analogue of the per-thread ``rowmax[]`` early exit.  Unlike
-a GPU warp, a TPU grid step is all-or-nothing, so skipping happens at
-(chunk_l x tile_r) tile granularity; without the pJDS sort, one long row
-in a tile forces the whole tile through — exactly the "light boxes"
-hardware-reservation waste of paper Fig. 2b, reproduced structurally.
+diagonal — the scalar-prefetched ``tile_chunks`` array holds the
+per-row-tile chunk count, the tile-granular analogue of the per-thread
+``rowmax[]`` early exit.  Unlike a GPU warp, a TPU grid step is
+all-or-nothing, so skipping happens at (chunk_l x tile_r) tile
+granularity; without the pJDS sort, one long row in a tile forces the
+whole tile through — exactly the "light boxes" hardware-reservation
+waste of paper Fig. 2b, reproduced structurally.  Skipped steps also
+clamp their val/col index maps to the tile's last real chunk, so the
+early exit saves the DMA traffic as well as the compute.
 """
 from __future__ import annotations
 
@@ -24,14 +29,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._backend import acc_dtype, chunk_clamp, resolve_interpret
+
 __all__ = ["ell_matvec_kernel_call"]
-
-
-def _acc_dtype(*dts):
-    r = jnp.result_type(*dts)
-    if r in (jnp.bfloat16, jnp.float16):
-        return jnp.float32
-    return r
 
 
 def _ellr_spmv_kernel(tile_chunks_ref, val_ref, col_ref, x_ref, y_ref):
@@ -46,7 +46,7 @@ def _ellr_spmv_kernel(tile_chunks_ref, val_ref, col_ref, x_ref, y_ref):
     @pl.when(j < tile_chunks_ref[i])
     def _body():
         x = x_ref[...]
-        gathered = x[col_ref[...]]
+        gathered = x[col_ref[...].astype(jnp.int32)]
         dt = y_ref.dtype
         contrib = val_ref[...].astype(dt) * gathered.astype(dt)
         y_ref[...] += jnp.sum(contrib, axis=0)[None, :]
@@ -64,32 +64,40 @@ def ell_matvec_kernel_call(
     *,
     chunk_l: int = 8,
     tile_r: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """y = A_ell @ x.
 
-    val/col_idx: (max_nzr, n_pad), max_nzr % chunk_l == 0, n_pad % tile_r == 0.
+    val/col_idx: (max_nzr, n_pad), max_nzr % chunk_l == 0, n_pad % tile_r == 0;
+    col_idx int16 or int32.
     tile_chunks: (n_pad // tile_r,) int32 — ceil(tile_row_max / chunk_l).
+    interpret:   None = compiled on TPU, interpret elsewhere.
     """
     max_nzr, n_pad = val.shape
     if max_nzr % chunk_l or n_pad % tile_r:
         raise ValueError("shape not aligned to (chunk_l, tile_r)")
     n_chunks = max_nzr // chunk_l
     n_tiles = n_pad // tile_r
-    dt = _acc_dtype(val.dtype, x.dtype)
+    dt = acc_dtype(val.dtype, x.dtype)
 
-    y = pl.pallas_call(
-        _ellr_spmv_kernel,
+    # Clamp skipped chunks' DMAs to the tile's last computed chunk (an
+    # all-empty tile has tile_chunks == 0: chunk_clamp guards it).
+    mat_map = lambda i, j, tc: (chunk_clamp(j, tc[i]), i)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(n_tiles, n_chunks),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),                    # tile_chunks
-            pl.BlockSpec((chunk_l, tile_r), lambda i, j: (j, i)),     # val
-            pl.BlockSpec((chunk_l, tile_r), lambda i, j: (j, i)),     # col
-            pl.BlockSpec(x.shape, lambda i, j: (0,)),                 # x resident
+            pl.BlockSpec((chunk_l, tile_r), mat_map),                 # val
+            pl.BlockSpec((chunk_l, tile_r), mat_map),                 # col
+            pl.BlockSpec(x.shape, lambda i, j, tc: (0,)),             # x resident
         ],
-        out_specs=pl.BlockSpec((1, tile_r), lambda i, j: (i, 0)),
+        out_specs=pl.BlockSpec((1, tile_r), lambda i, j, tc: (i, 0)),
+    )
+    y = pl.pallas_call(
+        _ellr_spmv_kernel,
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_tiles, tile_r), dt),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
         name="ellr_spmv",
     )(tile_chunks, val, col_idx, x)
     return y.reshape(n_pad)

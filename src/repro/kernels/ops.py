@@ -36,10 +36,11 @@ import numpy as np
 from repro.core import formats as F
 from repro.core import perf_model as PM
 from . import ref as R
+from ._backend import resolve_interpret
 from .pjds_spmv import pjds_matvec_kernel_call
 from .pjds_spmm import pjds_matmat_kernel_call
 from .ellr_spmv import ell_matvec_kernel_call
-from .sell_spmv import sell_matvec_kernel_call
+from .sell_spmv import sell_matvec_kernel_call, window_blocks
 
 __all__ = [
     "PJDSDevice",
@@ -61,6 +62,8 @@ __all__ = [
     "spmv",
     "clear_device_cache",
     "resolve_backend",
+    "resolve_interpret",
+    "choose_x_tiles",
 ]
 
 Backend = Literal["auto", "kernel", "ref"]
@@ -71,7 +74,13 @@ def resolve_backend(backend: Backend) -> str:
     """The one place ``backend="auto"`` is decided: the Pallas kernels on
     TPU, the jnp refs everywhere else (on CPU the kernels only run in
     interpret mode — Python per grid step — so the refs are the fast
-    path).  Explicit ``"kernel"``/``"ref"`` pass through untouched."""
+    path).  Explicit ``"kernel"``/``"ref"`` pass through untouched.
+
+    The companion :func:`resolve_interpret` (re-exported from
+    ``kernels._backend``) is the same decision one level down: with the
+    kernel backend selected, ``interpret=None`` means compiled Pallas on
+    TPU and interpret mode elsewhere — so ``backend="kernel"`` off-TPU
+    still runs (slowly, for testing), never crashes."""
     if backend in ("kernel", "ref"):
         return backend
     if backend != "auto":
@@ -86,15 +95,24 @@ _resolve_backend = resolve_backend   # the satellite-task spelling
 @dataclasses.dataclass(frozen=True)
 class PJDSDevice:
     """Device-resident pJDS operand.  Registered as a pytree so it can be
-    closed over / passed through jit and shard_map."""
+    closed over / passed through jit and shard_map.
+
+    ``val`` carries the (possibly bf16-compressed) value stream and
+    ``col_idx`` the (possibly int16-compressed) index stream exactly as
+    built by ``formats.csr_to_pjds(index_dtype=...)``; ``max_chunks`` is
+    the static per-block chunk ceiling the prefetched kernel grid needs
+    (None falls back to the total chunk count — correct, more grid
+    steps)."""
 
     val: jax.Array                     # (total_jds, b_r)
-    col_idx: jax.Array                 # (total_jds, b_r) int32
+    col_idx: jax.Array                 # (total_jds, b_r) int16/int32
     chunk_map: jax.Array               # (total_jds // chunk_l,) int32
     row_block: jax.Array               # (total_jds,) int32 (for the ref)
     n_blocks: int = dataclasses.field(metadata=dict(static=True))
     b_r: int = dataclasses.field(metadata=dict(static=True))
     chunk_l: int = dataclasses.field(metadata=dict(static=True))
+    max_chunks: Optional[int] = dataclasses.field(
+        default=None, metadata=dict(static=True))
 
     @property
     def n_rows_pad(self) -> int:
@@ -119,7 +137,7 @@ class SELLDevice:
     window-local inverse permutation the kernel fuses into its epilogue."""
 
     val: jax.Array                     # (total_jds, b_r)
-    col_idx: jax.Array                 # (total_jds, b_r) int32
+    col_idx: jax.Array                 # (total_jds, b_r) int16/int32
     chunk_map: jax.Array               # (total_jds // chunk_l,) int32
     row_block: jax.Array               # (total_jds,) int32 (for the ref)
     inv_perm: jax.Array                # (n_blocks * b_r,) int32, window-local
@@ -127,6 +145,10 @@ class SELLDevice:
     b_r: int = dataclasses.field(metadata=dict(static=True))
     chunk_l: int = dataclasses.field(metadata=dict(static=True))
     sigma: int = dataclasses.field(metadata=dict(static=True))
+    max_win_chunks: Optional[int] = dataclasses.field(
+        default=None, metadata=dict(static=True))
+    max_chunks: Optional[int] = dataclasses.field(
+        default=None, metadata=dict(static=True))   # per-BLOCK (spMM path)
 
     @property
     def n_rows_pad(self) -> int:
@@ -168,6 +190,7 @@ def to_device_pjds(p: F.PJDSMatrix, chunk_l: int = 8,
         n_blocks=p.n_blocks,
         b_r=p.b_r,
         chunk_l=chunk_l,
+        max_chunks=int(p.block_len.max(initial=chunk_l)) // chunk_l,
     )
 
 
@@ -199,6 +222,11 @@ def to_device_sell(s: F.SELLMatrix, chunk_l: int = 8,
         )
     row_block, chunk_map = _blocked_maps(p.block_len, chunk_l, p.n_blocks)
     val = p.val if dtype is None else p.val.astype(dtype)
+    # Static per-window chunk ceiling for the slab-output kernel grid.
+    w_b = window_blocks(s.sigma, p.b_r, p.n_blocks)
+    win_chunks = (np.add.reduceat(p.block_len // chunk_l,
+                                  np.arange(0, p.n_blocks, w_b))
+                  if p.n_blocks else np.array([1]))
     return SELLDevice(
         val=jnp.asarray(val),
         col_idx=jnp.asarray(p.col_idx),
@@ -209,6 +237,8 @@ def to_device_sell(s: F.SELLMatrix, chunk_l: int = 8,
         b_r=p.b_r,
         chunk_l=chunk_l,
         sigma=s.sigma,
+        max_win_chunks=int(win_chunks.max(initial=1)),
+        max_chunks=int(p.block_len.max(initial=chunk_l)) // chunk_l,
     )
 
 
@@ -224,13 +254,33 @@ def to_device_csr(m: F.CSRMatrix, dtype=None) -> CSRDevice:
     )
 
 
+def choose_x_tiles(n_cols_pad: int, itemsize: int,
+                   vmem_limit: Optional[int] = None) -> int:
+    """Column-tile count for the x-blocked kernels: the smallest power of
+    two whose x tile fits the VMEM allowance (a quarter of the chip's
+    VMEM by default — the matrix tiles, the output block and double
+    buffering need the rest).  Matrices whose RHS already fits return 1
+    (the resident fast path).  Callers fall back to 1 when the tile
+    count does not divide the runtime x length."""
+    if vmem_limit is None:
+        vmem_limit = PM.TPU_V5E.vmem_bytes // 4
+    t = 1
+    while n_cols_pad * itemsize > t * vmem_limit and t < 4096:
+        t *= 2
+    return t
+
+
 def pjds_matvec(a: PJDSDevice, x: jax.Array,
-                backend: Backend = "ref") -> jax.Array:
-    """y = A x in the permuted basis; y has n_rows_pad entries."""
+                backend: Backend = "ref", x_tiles: int = 1) -> jax.Array:
+    """y = A x in the permuted basis; y has n_rows_pad entries.
+    ``x_tiles > 1`` column-blocks the RHS on the kernel path (the ref is
+    a flat gather and never needs it); the kernel pads x internally to a
+    tile multiple, so any x length tiles."""
     if resolve_backend(backend) == "kernel":
         return pjds_matvec_kernel_call(
             a.val, a.col_idx, a.chunk_map, x,
-            n_blocks=a.n_blocks, chunk_l=a.chunk_l,
+            n_blocks=a.n_blocks, chunk_l=a.chunk_l, max_chunks=a.max_chunks,
+            x_tiles=x_tiles,
         )
     return R.pjds_matvec_ref(a.val, a.col_idx, a.row_block, x, a.n_blocks)
 
@@ -241,7 +291,8 @@ def pjds_matmat(a: PJDSDevice, x: jax.Array, backend: Backend = "ref",
     if resolve_backend(backend) == "kernel":
         return pjds_matmat_kernel_call(
             a.val, a.col_idx, a.chunk_map, x,
-            n_blocks=a.n_blocks, chunk_l=a.chunk_l, rhs_t=rhs_t,
+            n_blocks=a.n_blocks, chunk_l=a.chunk_l, max_chunks=a.max_chunks,
+            rhs_t=rhs_t,
         )
     return R.pjds_matmat_ref(a.val, a.col_idx, a.row_block, x, a.n_blocks)
 
@@ -257,13 +308,14 @@ def ell_matvec(a: ELLDevice, x: jax.Array,
 
 
 def sell_matvec(a: SELLDevice, x: jax.Array,
-                backend: Backend = "ref") -> jax.Array:
+                backend: Backend = "ref", x_tiles: int = 1) -> jax.Array:
     """y = A x with rows back in the ORIGINAL order (the window-local
     inverse permutation is fused); y has n_rows_pad entries."""
     if resolve_backend(backend) == "kernel":
         return sell_matvec_kernel_call(
             a.val, a.col_idx, a.chunk_map, a.inv_perm, x,
-            n_blocks=a.n_blocks, chunk_l=a.chunk_l,
+            n_blocks=a.n_blocks, chunk_l=a.chunk_l, sigma=a.sigma,
+            max_win_chunks=a.max_win_chunks, x_tiles=x_tiles,
         )
     return R.sell_matvec_ref(a.val, a.col_idx, a.row_block, a.inv_perm, x,
                              a.n_blocks)
@@ -291,6 +343,9 @@ def select_format(
     diag_align: int = 8,
     sigma: Optional[int] = None,
     spec: PM.TPUSpec = PM.TPU_V5E,
+    value_dtype=None,
+    index_dtype="auto",
+    x_tiles: int = 1,
 ) -> str:
     """Pick a storage format from row-length statistics alone.
 
@@ -300,7 +355,17 @@ def select_format(
     plus the HBM cost of any out-of-kernel permutation, then takes the
     first minimum in the fixed order ellpack_r < sell < pjds.  CSR wins
     only for degenerate inputs (empty, or too few rows to fill blocks).
-    The full rationale is DESIGN.md §5.
+    The pricing sees the byte widths that will actually be STORED —
+    ``value_dtype`` (bf16 storage halves the value stream) and
+    ``index_dtype`` (int16 when the column span fits halves the index
+    stream) — so compressed variants are priced correctly; RHS/LHS
+    traffic stays priced at the uncompressed vector width (the vectors
+    do not shrink with the matrix).  ``x_tiles > 1`` — dispatch has
+    determined x cannot be VMEM-resident — restricts the choice to the
+    formats whose kernels support a column-blocked RHS (sell/pjds) and
+    prices them with the tiled grid's re-read terms
+    (``perf_model.spmvm_bytes``: matrix stream × x_tiles, x re-read per
+    row block).  The full rationale is DESIGN.md §5.
     """
     n = m.n_rows
     if m.nnz == 0 or n < _CSR_MIN_ROWS_FACTOR * b_r:
@@ -309,26 +374,35 @@ def select_format(
     n_nzr = m.n_nzr
     if sigma is None:
         sigma = 8 * b_r
-    vb = m.data.dtype.itemsize
+    vb = np.dtype(value_dtype).itemsize if value_dtype is not None \
+        else m.data.dtype.itemsize
+    vecb = max(4, m.data.dtype.itemsize)
+    ib = F.resolve_index_dtype(index_dtype, m.shape[1]).itemsize
+    n_row_blocks = -(-n // b_r)
 
     ell_elems = F.estimate_storage_elements(rl, "ellpack_r", b_r, diag_align)
-    if ell_elems / m.nnz - 1.0 <= _ELL_OVERHEAD_TOL:
+    if x_tiles <= 1 and ell_elems / m.nnz - 1.0 <= _ELL_OVERHEAD_TOL:
         return "ellpack_r"    # rows (nearly) constant: no sort, no perm
 
     candidates = {
         "ellpack_r": PM.predicted_spmv_seconds(
-            ell_elems, n, n_nzr, spec=spec, value_bytes=vb),
+            ell_elems, n, n_nzr, spec=spec, value_bytes=vb, index_bytes=ib,
+            vec_bytes=vecb),
         "sell": PM.predicted_spmv_seconds(
             F.estimate_storage_elements(rl, "sell", b_r, diag_align, sigma),
             n, n_nzr,
-            perm_bytes=PM.perm_traffic_bytes(n, vb, window_local=True),
-            spec=spec, value_bytes=vb),
+            perm_bytes=PM.perm_traffic_bytes(n, vecb, window_local=True),
+            spec=spec, value_bytes=vb, index_bytes=ib, vec_bytes=vecb,
+            x_tiles=x_tiles, n_row_blocks=n_row_blocks),
         "pjds": PM.predicted_spmv_seconds(
             F.estimate_storage_elements(rl, "pjds", b_r, diag_align),
             n, n_nzr,
-            perm_bytes=PM.perm_traffic_bytes(n, vb, window_local=False),
-            spec=spec, value_bytes=vb),
+            perm_bytes=PM.perm_traffic_bytes(n, vecb, window_local=False),
+            spec=spec, value_bytes=vb, index_bytes=ib, vec_bytes=vecb,
+            x_tiles=x_tiles, n_row_blocks=n_row_blocks),
     }
+    if x_tiles > 1:
+        candidates.pop("ellpack_r")   # its kernel keeps x resident
     return min(candidates, key=candidates.get)
 
 
@@ -352,10 +426,24 @@ class SparseDevice:
     shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
     dev: Union[PJDSDevice, ELLDevice, SELLDevice, CSRDevice]
     inv_perm: Optional[jax.Array]      # pjds only: undo the global row sort
+    x_tiles: int = dataclasses.field(default=1, metadata=dict(static=True))
 
     @property
     def n_rows(self) -> int:
         return self.shape[0]
+
+    @property
+    def value_dtype(self):
+        """Dtype of the STORED value stream (bf16 for compressed builds);
+        results still come back in the accumulator dtype (>= f32)."""
+        return (self.dev.data if self.fmt == "csr" else self.dev.val).dtype
+
+    @property
+    def index_dtype(self):
+        """Dtype of the stored column-index stream (int16 or int32)."""
+        if self.fmt == "csr":
+            return self.dev.indices.dtype
+        return self.dev.col_idx.dtype
 
     def matvec(self, x: jax.Array, backend: Backend = "auto") -> jax.Array:
         """y = A x, original basis, length shape[0]."""
@@ -368,9 +456,10 @@ class SparseDevice:
         if self.fmt == "ellpack_r":
             return ell_matvec(self.dev, x, backend)[: self.n_rows]
         if self.fmt == "sell":
-            return sell_matvec(self.dev, x, backend)[: self.n_rows]
+            return sell_matvec(self.dev, x, backend,
+                               x_tiles=self.x_tiles)[: self.n_rows]
         if self.fmt == "pjds":
-            y_p = pjds_matvec(self.dev, x, backend)
+            y_p = pjds_matvec(self.dev, x, backend, x_tiles=self.x_tiles)
             return y_p[self.inv_perm][: self.n_rows]
         raise ValueError(f"unknown format {self.fmt!r}")
 
@@ -396,7 +485,7 @@ class SparseDevice:
             a = d if self.fmt == "pjds" else PJDSDevice(
                 val=d.val, col_idx=d.col_idx, chunk_map=d.chunk_map,
                 row_block=d.row_block, n_blocks=d.n_blocks, b_r=d.b_r,
-                chunk_l=d.chunk_l)
+                chunk_l=d.chunk_l, max_chunks=d.max_chunks)
             y_p = pjds_matmat(a, x, backend)
             inv = d.inv_perm if self.fmt == "sell" else self.inv_perm
             return y_p[inv][: self.n_rows]
@@ -514,8 +603,10 @@ def as_device(
     b_r: int = 128,
     diag_align: int = 8,
     sigma: Optional[int] = None,
-    chunk_l: int = 8,
+    chunk_l: int = 16,
     dtype=None,
+    index_dtype="auto",
+    x_tiles: Union[int, str] = "auto",
 ) -> SparseDevice:
     """Wrap a matrix as a :class:`SparseDevice`, converting at most once.
 
@@ -523,6 +614,23 @@ def as_device(
     small LRU, so repeated calls with equal data reuse one conversion),
     or an existing SparseDevice (returned unchanged; ``format`` must
     agree or be auto).
+
+    Storage compression knobs:
+
+    * ``dtype`` — the stored VALUE dtype (e.g. ``jnp.bfloat16`` halves
+      the value stream; accumulation stays f32).
+    * ``index_dtype`` — the stored column-index dtype; ``"auto"``
+      (default) compresses to int16 whenever the column span fits
+      (``formats.min_index_dtype``), falling back to int32.
+    * ``x_tiles`` — RHS column blocking for the blocked kernels;
+      ``"auto"`` picks :func:`choose_x_tiles` (1 — resident x — unless
+      the RHS would blow the VMEM budget).
+
+    ``chunk_l`` defaults to 16 — the measured sweet spot of the
+    grid-step-count vs padding trade now that the prefetched kernels
+    stream (chunk_l, b_r) tiles per step (benchmarks/bench_kernels.py
+    records the sweep); pass 8 to reproduce the old minimal-padding
+    builds.
 
     This is the conversion/caching layer under the operator protocol —
     new code should usually go one level up and call
@@ -540,8 +648,16 @@ def as_device(
     if not isinstance(a, F.CSRMatrix):
         raise TypeError(f"cannot dispatch on {type(a)}")
 
+    if x_tiles == "auto":
+        # Size the tile by the RUNTIME vector width (>= f32), not the
+        # stored value width: a bf16 build still gathers from an f32 x.
+        x_tiles = choose_x_tiles(a.shape[1], max(4, a.data.dtype.itemsize))
+    x_tiles = int(x_tiles)
+
     key = (id(a), format, b_r, diag_align, sigma, chunk_l,
-           np.dtype(dtype).name if dtype is not None else None)
+           np.dtype(dtype).name if dtype is not None else None,
+           "auto" if index_dtype == "auto" else np.dtype(index_dtype).name,
+           x_tiles)
     hit = _DEVICE_CACHE.get(key)
     if hit is not None and hit[0]() is a:
         return hit[1]
@@ -552,26 +668,37 @@ def as_device(
 
     fmt = format
     if fmt == "auto":
-        fmt = select_format(a, b_r=b_r, diag_align=da, sigma=sigma)
+        # When dispatch already decided x cannot be VMEM-resident, only
+        # the sell/pjds kernels can column-block it — select_format then
+        # restricts to those AND prices them with the tiled-grid re-read
+        # terms.  (An EXPLICIT format request, and the matmat paths, run
+        # resident regardless: x_tiles is a spMV-kernel knob, documented
+        # in pjds_spmv.py.)
+        fmt = select_format(a, b_r=b_r, diag_align=da, sigma=sigma,
+                            value_dtype=dtype, index_dtype=index_dtype,
+                            x_tiles=x_tiles)
 
     inv_perm = None
     if fmt == "csr":
         dev = to_device_csr(a, dtype=dtype)
     elif fmt == "ellpack_r":
-        e = F.csr_to_ell(a, row_align=b_r, diag_align=da)
+        e = F.csr_to_ell(a, row_align=b_r, diag_align=da,
+                         index_dtype=index_dtype)
         dev = to_device_ell(e, chunk_l=chunk_l, tile_r=b_r, dtype=dtype)
     elif fmt == "sell":
         s = F.csr_to_sell(a, c=b_r, sigma=sigma, diag_align=da,
-                          permuted_cols=False)
+                          permuted_cols=False, index_dtype=index_dtype)
         dev = to_device_sell(s, chunk_l=chunk_l, dtype=dtype)
     elif fmt == "pjds":
-        p = F.csr_to_pjds(a, b_r=b_r, diag_align=da, permuted_cols=False)
+        p = F.csr_to_pjds(a, b_r=b_r, diag_align=da, permuted_cols=False,
+                          index_dtype=index_dtype)
         dev = to_device_pjds(p, chunk_l=chunk_l, dtype=dtype)
         inv_perm = jnp.asarray(p.inv_perm)
     else:
         raise ValueError(f"unknown format {fmt!r}")
 
-    sd = SparseDevice(fmt=fmt, shape=a.shape, dev=dev, inv_perm=inv_perm)
+    sd = SparseDevice(fmt=fmt, shape=a.shape, dev=dev, inv_perm=inv_perm,
+                      x_tiles=x_tiles)
     _cache_put(key, a, sd)
     return sd
 
@@ -598,8 +725,11 @@ def spmv(
     2-D ``x`` of shape (n_cols, k) is dispatched to the multi-RHS spMM
     path, returning (n_rows, k).  The converted device representation is
     cached, so repeated ``spmv`` calls with the same host matrix convert
-    once.  ``convert_kwargs`` (b_r, diag_align, sigma, chunk_l, dtype)
-    pass through to :func:`as_device`.
+    once.  ``convert_kwargs`` (b_r, diag_align, sigma, chunk_l, dtype,
+    index_dtype, x_tiles) pass through to :func:`as_device` — in
+    particular ``dtype=jnp.bfloat16`` stores a compressed value stream
+    and ``index_dtype="auto"`` (the default) compresses indices to int16
+    whenever the column span fits.
     """
     from repro.core.operator import operator as _operator
     op = _operator(a, format=format, backend=backend, **convert_kwargs)

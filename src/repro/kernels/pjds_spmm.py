@@ -5,12 +5,18 @@ Y = A_pjds @ X with X: (n_cols_pad, n_rhs).  This is the kernel behind
 batch of activations) — the paper's format promoted to a first-class LM
 feature (DESIGN.md §4).
 
-Grid: (rhs tiles, jagged chunks) with chunks innermost so the X tile
-stays resident across a full sweep of the matrix.  Per step the kernel
-gathers (chunk_l, b_r) rows of the X tile — amortising each gathered RHS
-row over ``rhs_t`` lanes, which lifts the arithmetic intensity from the
-spMVM's ~2/12 flop/byte to ~2*rhs_t/12: multi-RHS is how a sparse format
-escapes the memory roofline on TPU.
+Grid: (rhs tile, row block, chunk) with chunks innermost, sharing the
+prefetched-extent design of ``pjds_spmv.py``: the scalar-prefetched
+``block_chunk_start``/``block_chunks`` arrays drive the val/col
+BlockSpec index maps, the (b_r, rhs_t) output block stays VMEM-pinned
+across its block's chunk sweep and is written back exactly once per rhs
+tile, and the X tile stays resident across a full sweep of the matrix.
+Per step the kernel gathers (chunk_l, b_r) rows of the X tile —
+amortising each gathered RHS row over ``rhs_t`` lanes, which lifts the
+arithmetic intensity from the spMVM's ~2/12 flop/byte to ~2*rhs_t/12:
+multi-RHS is how a sparse format escapes the memory roofline on TPU.
+int16 index / bf16 value streams cut the per-nonzero matrix bytes the
+same way they do for the spMVM kernels; accumulation stays f32.
 """
 from __future__ import annotations
 
@@ -21,37 +27,34 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._backend import acc_dtype, chunk_clamp, resolve_interpret
+from .pjds_spmv import block_extents
+
 __all__ = ["pjds_matmat_kernel_call"]
 
 
-def _acc_dtype(*dts):
-    r = jnp.result_type(*dts)
-    if r in (jnp.bfloat16, jnp.float16):
-        return jnp.float32
-    return r
+def _pjds_spmm_kernel(start_ref, cnt_ref, val_ref, col_ref, x_ref, y_ref):
+    b = pl.program_id(1)
+    c = pl.program_id(2)
 
-
-def _pjds_spmm_kernel(chunk_map_ref, val_ref, col_ref, x_ref, y_ref):
-    g = pl.program_id(1)
-    blk = chunk_map_ref[g]
-
-    @pl.when(g == 0)
+    @pl.when(c == 0)
     def _init():
         y_ref[...] = jnp.zeros_like(y_ref)
 
-    x = x_ref[...]                              # (n_cols_pad, rhs_t)
-    idx = col_ref[...]                          # (chunk_l, b_r)
-    gathered = x[idx]                           # (chunk_l, b_r, rhs_t)
-    dt = y_ref.dtype
-    contrib = val_ref[...].astype(dt)[..., None] * gathered.astype(dt)
-    acc = jnp.sum(contrib, axis=0)              # (b_r, rhs_t)
-    b_r = acc.shape[0]
-    y_ref[pl.dslice(blk * b_r, b_r), :] += acc
+    @pl.when(c < cnt_ref[b])
+    def _body():
+        x = x_ref[...]                              # (n_cols_pad, rhs_t)
+        idx = col_ref[...].astype(jnp.int32)        # (chunk_l, b_r); int16 ok
+        gathered = x[idx]                           # (chunk_l, b_r, rhs_t)
+        dt = y_ref.dtype
+        contrib = val_ref[...].astype(dt)[..., None] * gathered.astype(dt)
+        y_ref[...] += jnp.sum(contrib, axis=0)      # (b_r, rhs_t)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_blocks", "chunk_l", "rhs_t", "interpret"),
+    static_argnames=("n_blocks", "chunk_l", "max_chunks", "rhs_t",
+                     "interpret"),
 )
 def pjds_matmat_kernel_call(
     val: jax.Array,
@@ -61,41 +64,52 @@ def pjds_matmat_kernel_call(
     *,
     n_blocks: int,
     chunk_l: int = 8,
+    max_chunks: int | None = None,
     rhs_t: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Y = A_pjds @ X (permuted basis).
 
-    val/col_idx: (total_jds, b_r); chunk_map: (total_jds//chunk_l,) int32;
+    val/col_idx: (total_jds, b_r), col_idx int16 or int32;
+    chunk_map: (total_jds//chunk_l,) non-decreasing int32;
     x: (n_cols_pad, n_rhs) with n_rhs % min(rhs_t, n_rhs) == 0 — the RHS
     tile shrinks to n_rhs for narrow blocks (k < rhs_t), so small
     multi-RHS counts (the distributed block solvers use k ~ 4) run as a
     single tile instead of failing the alignment check.
+    max_chunks: static max chunks of any single block (None: total).
     Returns (n_blocks * b_r, n_rhs) in the accumulator dtype.
     """
     total_jds, b_r = val.shape
     n_cols_pad, n_rhs = x.shape
-    dt = _acc_dtype(val.dtype, x.dtype)
+    dt = acc_dtype(val.dtype, x.dtype)
     if n_rhs == 0:                      # empty RHS block: nothing to do
         return jnp.zeros((n_blocks * b_r, 0), dt)
     rhs_t = min(rhs_t, n_rhs)
     if total_jds % chunk_l or n_rhs % rhs_t:
         raise ValueError("shapes not aligned to (chunk_l, rhs_t)")
     n_chunks = total_jds // chunk_l
+    if max_chunks is None:
+        max_chunks = n_chunks
     n_tiles = n_rhs // rhs_t
+    start, cnt = block_extents(chunk_map, n_blocks)
 
+    mat_map = lambda t, b, c, s, n: (s[b] + chunk_clamp(c, n[b]), 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_tiles, n_blocks, max_chunks),
+        in_specs=[
+            pl.BlockSpec((chunk_l, b_r), mat_map),                       # val
+            pl.BlockSpec((chunk_l, b_r), mat_map),                       # col
+            pl.BlockSpec((n_cols_pad, rhs_t),
+                         lambda t, b, c, s, n: (0, t)),                  # X tile
+        ],
+        out_specs=pl.BlockSpec((b_r, rhs_t), lambda t, b, c, s, n: (b, t)),
+    )
     y = pl.pallas_call(
         _pjds_spmm_kernel,
-        grid=(n_tiles, n_chunks),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),                        # chunk_map
-            pl.BlockSpec((chunk_l, b_r), lambda t, g: (g, 0)),            # val
-            pl.BlockSpec((chunk_l, b_r), lambda t, g: (g, 0)),            # col
-            pl.BlockSpec((n_cols_pad, rhs_t), lambda t, g: (0, t)),       # X tile
-        ],
-        out_specs=pl.BlockSpec((n_blocks * b_r, rhs_t), lambda t, g: (0, t)),
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_blocks * b_r, n_rhs), dt),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
         name="pjds_spmm",
-    )(chunk_map, val, col_idx, x)
+    )(start, cnt, val, col_idx, x)
     return y

@@ -15,16 +15,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ._backend import acc_dtype as _acc_dtype
+
 __all__ = ["pjds_matvec_ref", "pjds_matmat_ref", "ell_matvec_ref",
            "sell_matvec_ref", "csr_matvec_ref",
            "csr_rmatvec_ref", "ell_rmatvec_ref", "blocked_rmatvec_ref"]
-
-
-def _acc_dtype(*dts):
-    r = jnp.result_type(*dts)
-    if r in (jnp.bfloat16, jnp.float16):
-        return jnp.float32
-    return r
 
 
 def pjds_matvec_ref(val: jax.Array, col_idx: jax.Array, row_block: jax.Array,

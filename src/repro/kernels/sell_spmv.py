@@ -6,16 +6,19 @@ windows of ``sigma`` rows instead of globally, bounding how far any row
 moves from its original position.  ``sigma = n_rows`` reproduces pJDS,
 ``sigma = C`` (= ``b_r`` here) is pure sliced ELLPACK.  See DESIGN.md §3.
 
-The kernel reuses the chunked (chunk_l, b_r) VMEM-tile walk of
-``pjds_spmv.py`` — storage layout is identical — with one structural
-difference: because the row permutation is *window-local*, the inverse
-permutation that takes y back to the original row order is applied
-INSIDE the kernel, fused after the last accumulation step.  Every entry
-of ``inv_perm`` satisfies ``|inv_perm[i] - i| < sigma``, so on hardware
-the final gather touches only a sigma-sized neighbourhood of the
-VMEM-resident accumulator (a pJDS global sort would make this a full
-scatter across all of y — the reason the pJDS kernel leaves the
-unpermute to the caller).
+The kernel shares the prefetched multi-tile grid of ``pjds_spmv.py``
+(scalar-prefetched chunk extents driving the BlockSpec index maps, an
+optional column-blocked x axis, int16 index / bf16 value streams with f32
+accumulation) with one structural difference: the *output block is a
+whole sigma window* — ``w_b = sigma / b_r`` row blocks — instead of one
+row block.  Because the SELL row sort never crosses a sigma-window
+boundary, the window-local inverse permutation that takes y back to the
+original row order is applied INSIDE the kernel, fused after the
+window's last chunk, as a gather that stays entirely within the
+VMEM-pinned output slab.  The whole ``y`` is never resident (the pJDS
+global sort would need exactly that, which is why the pJDS kernel leaves
+the unpermute to the caller), each output slab is written to HBM once,
+already in original row order, and the unpermute costs no HBM traffic.
 
 Consequences of the fused unpermute:
 
@@ -26,9 +29,12 @@ Consequences of the fused unpermute:
 * The RHS gather locality of the original ordering is preserved up to
   sigma, which is the whole point of bounding the sort window.
 
+When sigma is not a usable window size (not commensurate with ``b_r``,
+or >= the padded row count — the pJDS limit), the window degenerates to
+the full output, reproducing the old whole-y-resident behaviour.
+
 VMEM working set per step: 2 tiles * chunk_l * b_r * itemsize
-(+ x + y + inv_perm resident), same as the pJDS kernel plus 4 bytes/row
-for the permutation.
++ x tile + one (w_b, b_r) output slab + its slice of ``inv_perm``.
 """
 from __future__ import annotations
 
@@ -39,45 +45,61 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["sell_matvec_kernel_call"]
+from ._backend import (acc_dtype, chunk_clamp, pad_x_to_tiles,
+                       resolve_interpret, tile_contrib)
+from .pjds_spmv import block_extents
+
+__all__ = ["sell_matvec_kernel_call", "window_blocks"]
 
 
-def _acc_dtype(*dts):
-    r = jnp.result_type(*dts)
-    if r in (jnp.bfloat16, jnp.float16):
-        return jnp.float32
-    return r
+def window_blocks(sigma: int, b_r: int, n_blocks: int) -> int:
+    """Row blocks per kernel output slab (``w_b``): the smallest block
+    multiple whose row span is also a multiple of sigma, so every
+    sigma-sized sort window — and therefore every entry of the inverse
+    permutation — lies inside exactly one slab.  Falls back to the whole
+    output when sigma and b_r are incommensurate or the window would
+    cover everything anyway."""
+    if sigma >= n_blocks * b_r:
+        return max(n_blocks, 1)
+    if sigma >= b_r and sigma % b_r == 0:
+        return sigma // b_r
+    if sigma > 0 and b_r % sigma == 0:
+        return 1
+    return max(n_blocks, 1)
 
 
-def _sell_spmv_kernel(chunk_map_ref, val_ref, col_ref, x_ref, inv_ref, y_ref,
-                      *, n_chunks):
-    g = pl.program_id(0)
-    blk = chunk_map_ref[g]
+def _sell_spmv_kernel(wstart_ref, wcnt_ref, slot_ref, val_ref, col_ref,
+                      x_ref, inv_ref, y_ref, *, x_tiles, x_t):
+    w = pl.program_id(0)
+    t = pl.program_id(1)
+    c = pl.program_id(2)
 
-    # Zero the (fully VMEM-resident) output once, before any accumulation.
-    @pl.when(g == 0)
+    # First visit of this output slab: zero it while it is VMEM-pinned.
+    @pl.when((t == 0) & (c == 0))
     def _init():
         y_ref[...] = jnp.zeros_like(y_ref)
 
-    x = x_ref[...]
-    idx = col_ref[...]                       # (chunk_l, b_r)
-    gathered = x[idx]                        # VPU dynamic-gather from VMEM
-    dt = y_ref.dtype
-    contrib = val_ref[...].astype(dt) * gathered.astype(dt)
-    y_ref[blk, :] += jnp.sum(contrib, axis=0)
+    @pl.when(c < wcnt_ref[w])
+    def _body():
+        slot = slot_ref[wstart_ref[w] + c]       # row block within the slab
+        idx = col_ref[...].astype(jnp.int32)     # (chunk_l, b_r); int16 ok
+        contrib = tile_contrib(val_ref[...], idx, x_ref[...], t, x_t,
+                               x_tiles, y_ref.dtype)
+        y_ref[slot, :] += jnp.sum(contrib, axis=0)
 
-    # Fused window-local unpermute: after the last chunk, take the
-    # window-sorted accumulator back to the original row order.  Each
-    # gather index stays within sigma of its destination.
-    @pl.when(g == n_chunks - 1)
+    # Fused window-local unpermute: after the slab's last accumulation,
+    # gather the window-sorted slab back to the original row order — the
+    # permutation never leaves the slab, so this costs no HBM traffic.
+    @pl.when((t == x_tiles - 1) & (c == wcnt_ref[w] - 1))
     def _unpermute():
         ys = y_ref[...].reshape(-1)
-        y_ref[...] = ys[inv_ref[...]].reshape(y_ref.shape)
+        y_ref[...] = ys[inv_ref[...].reshape(-1)].reshape(y_ref.shape)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_blocks", "chunk_l", "interpret"),
+    static_argnames=("n_blocks", "chunk_l", "sigma", "max_win_chunks",
+                     "x_tiles", "interpret"),
 )
 def sell_matvec_kernel_call(
     val: jax.Array,
@@ -88,20 +110,32 @@ def sell_matvec_kernel_call(
     *,
     n_blocks: int,
     chunk_l: int = 8,
-    interpret: bool = True,
+    sigma: int = 0,
+    max_win_chunks: int | None = None,
+    x_tiles: int = 1,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """y = A_sell @ x, returned in the ORIGINAL row order.
 
     ``chunk_l`` must divide every SELL chunk (= pJDS block) length; the
     ``ops.to_device_sell`` wrapper checks this.
 
-    val/col_idx: (total_jds, b_r) with total_jds % chunk_l == 0.
-    chunk_map:   (total_jds // chunk_l,) int32 row-block id per chunk.
+    val/col_idx: (total_jds, b_r) with total_jds % chunk_l == 0; col_idx
+                 int16 or int32.
+    chunk_map:   (total_jds // chunk_l,) non-decreasing int32 row-block
+                 id per chunk.
     inv_perm:    (n_blocks * b_r,) int32, window-local inverse of the
                  sigma-window row sort: y_out[i] = y_sorted[inv_perm[i]].
-    x:           (n_cols_pad,) RHS.  Original basis when the matrix was
-                 built with permuted_cols=False (the dispatch-layer
-                 default); permuted basis otherwise.
+    x:           (n_cols_pad,) RHS (zero-padded internally to a multiple
+                 of x_tiles).  Original basis when the matrix was built
+                 with permuted_cols=False (the dispatch-layer default);
+                 permuted basis otherwise.
+    sigma:       the sort window (rows); sets the output-slab size via
+                 :func:`window_blocks`.  0 (or >= n_rows_pad) keeps the
+                 whole output resident.
+    max_win_chunks: static max chunk count of any window slab
+                 (``SELLDevice`` carries it); None falls back to the
+                 total chunk count.
     Returns y:   (n_blocks * b_r,) in the accumulator dtype.
     """
     total_jds, b_r = val.shape
@@ -110,21 +144,44 @@ def sell_matvec_kernel_call(
     if inv_perm.shape != (n_blocks * b_r,):
         raise ValueError(f"inv_perm shape {inv_perm.shape} != ({n_blocks * b_r},)")
     n_chunks = total_jds // chunk_l
-    dt = _acc_dtype(val.dtype, x.dtype)
+    x, x_t = pad_x_to_tiles(x, x_tiles)
+    if max_win_chunks is None:
+        max_win_chunks = n_chunks
+    dt = acc_dtype(val.dtype, x.dtype)
 
-    y_blk = pl.pallas_call(
-        functools.partial(_sell_spmv_kernel, n_chunks=n_chunks),
-        grid=(n_chunks,),
+    w_b = window_blocks(sigma, b_r, n_blocks)
+    n_win = -(-n_blocks // w_b)
+    n_out = n_win * w_b * b_r
+    # Window id per chunk, then per-window extents + slab-local slots.
+    win_map = chunk_map // w_b
+    wstart, wcnt = block_extents(win_map, n_win)
+    slot = (chunk_map - win_map * w_b).astype(jnp.int32)
+    # Slab-local inverse permutation, padded with identity past n_blocks
+    # (the final window of a non-divisible block count).
+    inv_pad = jnp.concatenate([
+        inv_perm.astype(jnp.int32),
+        jnp.arange(n_blocks * b_r, n_out, dtype=jnp.int32)])
+    inv_local = (inv_pad - (jnp.arange(n_out, dtype=jnp.int32)
+                            // (w_b * b_r)) * (w_b * b_r))
+    inv_local = inv_local.reshape(n_win * w_b, b_r)
+
+    mat_map = lambda w, t, c, ws, wc, sl: (ws[w] + chunk_clamp(c, wc[w]), 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n_win, x_tiles, max_win_chunks),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),                # chunk_map
-            pl.BlockSpec((chunk_l, b_r), lambda g: (g, 0)),       # val tile
-            pl.BlockSpec((chunk_l, b_r), lambda g: (g, 0)),       # col tile
-            pl.BlockSpec(x.shape, lambda g: (0,)),                # x resident
-            pl.BlockSpec(inv_perm.shape, lambda g: (0,)),         # inv resident
+            pl.BlockSpec((chunk_l, b_r), mat_map),                    # val
+            pl.BlockSpec((chunk_l, b_r), mat_map),                    # col
+            pl.BlockSpec((x_t,), lambda w, t, c, ws, wc, sl: (t,)),   # x tile
+            pl.BlockSpec((w_b, b_r), lambda w, t, c, ws, wc, sl: (w, 0)),
         ],
-        out_specs=pl.BlockSpec((n_blocks, b_r), lambda g: (0, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_blocks, b_r), dt),
-        interpret=interpret,
+        out_specs=pl.BlockSpec((w_b, b_r), lambda w, t, c, ws, wc, sl: (w, 0)),
+    )
+    y_blk = pl.pallas_call(
+        functools.partial(_sell_spmv_kernel, x_tiles=x_tiles, x_t=x_t),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_win * w_b, b_r), dt),
+        interpret=resolve_interpret(interpret),
         name="sell_spmv",
-    )(chunk_map, val, col_idx, x, inv_perm)
-    return y_blk.reshape(n_blocks * b_r)
+    )(wstart, wcnt, slot, val, col_idx, x, inv_local)
+    return y_blk.reshape(n_out)[: n_blocks * b_r]

@@ -98,8 +98,8 @@ def test_conversion_cache_reuses_device_rep(rng):
     d1 = ops.as_device(m, "auto", b_r=B_R)
     d2 = ops.as_device(m, "auto", b_r=B_R)
     assert d1 is d2
-    # different build params -> different entry
-    d3 = ops.as_device(m, "auto", b_r=B_R, chunk_l=16)
+    # different build params -> different entry (8 was the old default)
+    d3 = ops.as_device(m, "auto", b_r=B_R, chunk_l=8)
     assert d3 is not d1
     # spmv goes through the same cache
     x = rng.standard_normal(96).astype(np.float32)
