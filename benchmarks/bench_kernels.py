@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.core import formats as F, matrices as M, perf_model as PM
 from repro.kernels import ops
-from .common import time_fn, csv_row, write_bench_json
+from .common import seeded_rng, time_fn, csv_row, write_bench_json
 
 # Compressed-variant guard thresholds (see module docstring).
 MAX_COMPRESSED_BYTES_RATIO = 0.65
@@ -106,7 +106,7 @@ def run(print_rows=True):
     rows = []
     m = M.uhbr(scale=0.003)
     n = m.shape[0]
-    rng = np.random.default_rng(0)
+    rng = seeded_rng()
     x = rng.standard_normal(n).astype(np.float32)
 
     # --- b_r x diag_align padding overhead (storage elements vs nnz) ----

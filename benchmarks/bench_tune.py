@@ -1,0 +1,117 @@
+"""Tuned-vs-heuristic study + calibration guard -> BENCH_tune.json.
+
+For each bench matrix (uhbr, samg — the two the kernel study uses) the
+autotuner runs against a FRESH cache (no state leaks between CI runs),
+the winning statics and the heuristic default are re-measured with one
+shared harness, and the speedup is recorded.  Three REGRESSION GUARDS
+(non-zero exit, so the CI tuner-smoke job fails):
+
+* the tuned config is never more than 5% slower than the heuristic
+  pick (the prune keeps the heuristic in the measured set, so the
+  tuner can only lose by re-measurement noise);
+* at least one matrix shows a measurable tuned win (>= 2%);
+* re-running the tuner hits the cache (no re-measurement), and fitting
+  the calibration on the BENCH_kernels roofline rows STRICTLY reduces
+  the predicted-vs-measured error vs the uncalibrated model (falls
+  back to this run's measured rows when BENCH_kernels.json is absent).
+"""
+from __future__ import annotations
+
+import pathlib
+import tempfile
+
+from repro.core import matrices as M
+from repro import tune as T
+from .common import csv_row, write_bench_json
+
+MAX_TUNED_SLOWDOWN = 1.05      # tuned may never lose > 5% to the heuristic
+MIN_BEST_SPEEDUP = 1.02        # >= one matrix must win measurably
+
+_MATRICES = (
+    ("uhbr", lambda: M.uhbr(scale=0.003)),
+    ("samg", lambda: M.samg(scale=0.004)),
+)
+
+
+def run(print_rows=True):
+    rows = []
+    cache = T.TuneCache(
+        pathlib.Path(tempfile.mkdtemp(prefix="bench_tune_")) / "cache.json")
+
+    speedups = {}
+    for name, mk in _MATRICES:
+        m = mk()
+        heur = T.heuristic_candidate(m)
+        res = T.autotune(m, cache=cache, warmup=2, iters=9)
+        res2 = T.autotune(m, cache=cache)
+        if not res2.cached or res2.best != res.best:
+            raise SystemExit(
+                f"REGRESSION: tuner cache round-trip failed on {name} "
+                f"(cached={res2.cached})")
+
+        # drift-robust interleaved A/B for the final comparison (this
+        # number is the guarded artifact; one-sided timing would let
+        # background-load drift land on one side)
+        t_heur, t_tuned = T.ab_compare(m, heur, res.best,
+                                       rounds=9, iters=3, warmup=3)
+        speedups[name] = t_heur / t_tuned
+        rows.append(dict(
+            kind="tuned_vs_heuristic", matrix=name,
+            heuristic=heur.as_dict(), tuned=res.best.as_dict(),
+            heuristic_s=t_heur, tuned_s=t_tuned,
+            speedup=speedups[name], cache_hit_roundtrip=True,
+            n_measured=len(res.rows)))
+        if print_rows:
+            print(csv_row(f"tune_{name}", t_tuned * 1e6,
+                          f"speedup={speedups[name]:.2f}x "
+                          f"tuned=[{res.best.label()}] "
+                          f"heur=[{heur.label()}]"))
+        if t_tuned > MAX_TUNED_SLOWDOWN * t_heur:
+            raise SystemExit(
+                f"REGRESSION: tuned config on {name} is "
+                f"{t_tuned / t_heur:.2f}x the heuristic time "
+                f"(> {MAX_TUNED_SLOWDOWN})")
+
+        # calibration input: this matrix's measured candidate rows
+        rows.extend(dict(kind="measured_candidate", matrix=name, **r)
+                    for r in res.rows)
+
+    best_mat = max(speedups, key=speedups.get)
+    rows.append(dict(kind="best_win", matrix=best_mat,
+                     speedup=speedups[best_mat]))
+    if speedups[best_mat] < MIN_BEST_SPEEDUP:
+        raise SystemExit(
+            f"REGRESSION: no matrix shows a measurable tuned win "
+            f"(best {best_mat} at {speedups[best_mat]:.3f}x "
+            f"< {MIN_BEST_SPEEDUP})")
+
+    # ---- calibration: strict error improvement on roofline rows ------
+    bk = pathlib.Path("BENCH_kernels.json")
+    if bk.exists():
+        cal_rows, cal_src = T.rows_from_bench_kernels(bk), str(bk)
+    else:
+        cal_rows = [r for r in rows if r.get("kind") == "measured_candidate"]
+        cal_src = "bench_tune:measured_candidates"
+    err0 = T.model_error(cal_rows)
+    cal = T.fit_calibration(cal_rows, source=cal_src)
+    err1 = T.model_error(cal_rows, cal)
+    rows.append(dict(kind="calibration", source=cal_src, n_rows=len(cal_rows),
+                     rms_rel_err_uncalibrated=err0,
+                     rms_rel_err_calibrated=err1,
+                     bw_scale=cal.bw_scale,
+                     overhead_s=dict(cal.overhead_s)))
+    if print_rows:
+        print(csv_row("tune_calibration", 0.0,
+                      f"rms_rel_err={err0:.3f}->{err1:.3f} "
+                      f"bw_scale={cal.bw_scale:.2e}"))
+    if not err1 < err0:
+        raise SystemExit(
+            f"REGRESSION: calibration did not improve the perf model on "
+            f"{cal_src} ({err0:.4f} -> {err1:.4f})")
+
+    write_bench_json("tune", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

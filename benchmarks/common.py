@@ -8,6 +8,16 @@ import time
 import jax
 import numpy as np
 
+# One seed policy for every suite (mirrored by tests/conftest.DEFAULT_SEED):
+# benchmark inputs are deterministic so BENCH_*.json rows are comparable
+# across runs and the CI regression guards never flake on input draw.
+DEFAULT_SEED = 0
+
+
+def seeded_rng(seed: int | None = None) -> np.random.Generator:
+    """Deterministic generator for benchmark inputs."""
+    return np.random.default_rng(DEFAULT_SEED if seed is None else seed)
+
 
 def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
     """Median wall-clock seconds per call of a jitted fn."""

@@ -123,6 +123,14 @@ class DistPJDS:
         default=None, metadata=dict(static=True))  # prefetched-grid ceilings
     rem_max_chunks: int = dataclasses.field(
         default=None, metadata=dict(static=True))
+    rem_chunk_l: int = dataclasses.field(
+        default=None, metadata=dict(static=True))
+        # tile height of the REMOTE operand when tuned independently of
+        # the local one (None -> shares chunk_l); see repro.tune
+
+    @property
+    def rem_chunk_l_eff(self) -> int:
+        return self.chunk_l if self.rem_chunk_l is None else self.rem_chunk_l
 
     @property
     def n_global_pad(self) -> int:
@@ -198,6 +206,7 @@ def partition_csr(
     halo_w: int | None = None,
     sigma: int | None = None,
     index_dtype="auto",
+    rem_chunk_l: int | None = None,
 ) -> DistPJDS:
     """Row-partition a global CSR onto ``n_dev`` devices as :class:`DistPJDS`.
 
@@ -222,6 +231,13 @@ def partition_csr(
     whenever the per-device slice fits, however large the global matrix
     is.  This is where the paper's distributed scaling and the
     compressed-stream work compound.
+
+    ``rem_chunk_l`` gives the REMOTE (halo-coupling) operand its own
+    tile height — its rows are structurally much shorter than the local
+    block-diagonal rows, so padding both to one chunk_l wastes storage
+    on whichever side fits worse.  ``None`` shares ``chunk_l`` (the old
+    behaviour); ``repro.tune.tune_partition`` measures the two
+    independently and ``dist_operator(tune="auto")`` feeds them here.
     """
     if m.shape[0] != m.shape[1]:
         raise ValueError("distributed spMVM expects a square matrix")
@@ -272,21 +288,25 @@ def partition_csr(
     sig = min(int(sigma) if sigma is not None else 8 * b_r, n_loc)
     sig = max(sig, 1)
 
+    rcl = chunk_l if rem_chunk_l is None else int(rem_chunk_l)
     locs, rems, invs = [], [], []
     for p in range(n_dev):
         loc, rem = _split_loc_rem(slices[p], p, n_loc, n_dev, halo_w)
         # One shared per-device row sort (by TOTAL row length) so the two
         # partial results add in the same permuted order — windowed to
         # sigma rows (SELL-C-sigma) so the inverse permutation applied to
-        # y stays window-local.
+        # y stays window-local.  Local and remote operands may carry
+        # different tile heights; each pads its own jagged diagonals.
         total_rl = loc.row_lengths() + rem.row_lengths()
         perm = F.windowed_sort_perm(total_rl, sig)
-        pj_loc = F._pjds_with_perm(loc, perm, b_r, diag_align, False,
+        pj_loc = F._pjds_with_perm(loc, perm, b_r,
+                                   max(diag_align, chunk_l), False,
                                    index_dtype)
-        pj_rem = F._pjds_with_perm(rem, perm, b_r, diag_align, False,
+        pj_rem = F._pjds_with_perm(rem, perm, b_r,
+                                   max(diag_align, rcl), False,
                                    index_dtype)
         locs.append(ops.to_device_pjds(pj_loc, chunk_l))
-        rems.append(ops.to_device_pjds(pj_rem, chunk_l))
+        rems.append(ops.to_device_pjds(pj_rem, rcl))
         inv = np.empty(n_loc, dtype=np.int32)
         inv[perm] = np.arange(n_loc, dtype=np.int32)
         invs.append(inv)
@@ -342,6 +362,7 @@ def partition_csr(
         sigma=sig,
         loc_max_chunks=_max_chunks(locs),
         rem_max_chunks=_max_chunks(rems),
+        rem_chunk_l=None if rcl == chunk_l else rcl,
     )
 
 
@@ -412,7 +433,7 @@ def dist_matvec_local(dist: DistPJDS, x_blk: jax.Array, *, axis: str,
                                  backend=backend,
                                  max_chunks=dist.loc_max_chunks)
     rem_spmv = functools.partial(_local_spmv, n_blocks=dist.n_blocks,
-                                 b_r=dist.b_r, chunk_l=dist.chunk_l,
+                                 b_r=dist.b_r, chunk_l=dist.rem_chunk_l_eff,
                                  backend=backend,
                                  max_chunks=dist.rem_max_chunks)
     loc_args = (sq(dist.loc_val), sq(dist.loc_col), sq(dist.loc_chunk_map),

@@ -32,6 +32,7 @@ and gives the Pallas kernels clean (8k, 128) VMEM tiles.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Tuple
 
 import numpy as np
@@ -59,6 +60,7 @@ __all__ = [
     "csr_remote_columns_by_distance",
     "csr_transpose",
     "csr_diagonal",
+    "structural_fingerprint",
     "PAD_COL",
     "min_index_dtype",
     "resolve_index_dtype",
@@ -508,6 +510,27 @@ def csr_diagonal(m: CSRMatrix) -> np.ndarray:
     # so the diagonal must agree
     np.add.at(d, rows[on_diag], m.data[on_diag])
     return d
+
+
+# --------------------------------------------------------------------------
+# Structural fingerprint (the autotuner's cache key component)
+# --------------------------------------------------------------------------
+def structural_fingerprint(m: CSRMatrix) -> str:
+    """sha1 digest of the matrix STRUCTURE: shape + indptr + indices,
+    deliberately excluding the stored values.
+
+    Every quantity the tuner's search space and the perf model depend on
+    — row lengths, padding, column spans, halo coupling — is a function
+    of the structure alone, so tuned kernel statics transfer across
+    value updates (a solver re-assembling coefficients on a fixed mesh
+    keeps its cache hit), while any structural edit (new entry, reorder,
+    resize) changes the digest and invalidates the cached decision.
+    """
+    h = hashlib.sha1()
+    h.update(np.asarray(m.shape, dtype=np.int64).tobytes())
+    h.update(np.ascontiguousarray(m.indptr, dtype=np.int64).tobytes())
+    h.update(np.ascontiguousarray(m.indices, dtype=np.int64).tobytes())
+    return h.hexdigest()
 
 
 # --------------------------------------------------------------------------

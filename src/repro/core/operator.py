@@ -449,11 +449,15 @@ def operator(
     ``SparseDevice``, or already an operator (returned unchanged).
     Conversion and caching ride :func:`kernels.ops.as_device`;
     ``format``/``convert_kwargs`` (b_r, diag_align, sigma, chunk_l,
-    dtype, index_dtype, x_tiles) pass through — in particular
+    dtype, index_dtype, x_tiles, tune) pass through — in particular
     ``dtype=jnp.bfloat16`` stores a compressed bf16 value stream (f32
     accumulation; ``op.dtype`` reports the storage dtype, results come
-    back f32) and ``index_dtype="auto"`` (the default) compresses the
-    column indices to int16 whenever the column span fits.
+    back f32), ``index_dtype="auto"`` (the default) compresses the
+    column indices to int16 whenever the column span fits, and
+    ``tune="auto"`` replaces the static dispatch heuristic with the
+    measured autotuner (``repro.tune``, DESIGN.md §9; with
+    ``transpose="device"`` the transposed operand is tuned
+    independently — its row statistics are A's COLUMN statistics).
     ``transpose="device"`` additionally converts
     ``A^T`` (``formats.csr_transpose`` — the CSC-of-blocks build) so
     ``op.T @ x`` runs the forward kernels; the default ``"ref"`` serves
@@ -503,6 +507,7 @@ def dist_operator(
     halo_w: Optional[int] = None,
     sigma: Optional[int] = None,
     index_dtype="auto",
+    tune: str = "off",
 ) -> DistOperator:
     """Partition ``m`` over ``mesh[axis]`` as a :class:`DistOperator`.
 
@@ -514,20 +519,43 @@ def dist_operator(
     ``index_dtype="auto"`` stores int16 column indices whenever the
     per-device slice spans fit (they are structurally bounded by the
     row partition — see ``dist_spmv.partition_csr``).
+
+    ``tune="auto"|"force"`` measures the best tile height for the LOCAL
+    and REMOTE operands independently (``repro.tune.tune_partition``;
+    cached persistently like the single-device tuner) and partitions
+    with the winners — the forward and transpose partitions are tuned
+    separately, since ``A^T``'s halo coupling is the mirror structure.
     """
     if isinstance(m, D.DistPJDS):
         return DistOperator(m, mesh, axis=axis, mode=mode, backend=backend,
                             halo=halo)
     n_dev = mesh.shape[axis]
+    if tune not in ("off", "auto", "force"):
+        raise ValueError(f"tune must be 'off', 'auto' or 'force'; "
+                         f"got {tune!r}")
+
+    def _chunks(mm):
+        if tune == "off":
+            return chunk_l, None
+        from repro import tune as T    # deferred: tune imports kernels.ops
+        tp = T.tune_partition(mm, n_dev, b_r=b_r, diag_align=diag_align,
+                              sigma=sigma, index_dtype=index_dtype,
+                              force=(tune == "force"))
+        return tp.chunk_l, tp.rem_chunk_l
+
+    cl, rcl = _chunks(m)
     dist = D.partition_csr(m, n_dev, b_r=b_r, diag_align=diag_align,
-                           chunk_l=chunk_l, halo_w=halo_w, sigma=sigma,
-                           index_dtype=index_dtype)
+                           chunk_l=cl, halo_w=halo_w, sigma=sigma,
+                           index_dtype=index_dtype, rem_chunk_l=rcl)
     t_dist = None
     if transpose == "device":
-        t_dist = D.partition_csr(F.csr_transpose(m), n_dev, b_r=b_r,
-                                 diag_align=diag_align, chunk_l=chunk_l,
+        mt = F.csr_transpose(m)
+        cl_t, rcl_t = _chunks(mt)
+        t_dist = D.partition_csr(mt, n_dev, b_r=b_r,
+                                 diag_align=diag_align, chunk_l=cl_t,
                                  halo_w=None, sigma=sigma,
-                                 index_dtype=index_dtype)
+                                 index_dtype=index_dtype,
+                                 rem_chunk_l=rcl_t)
     elif transpose is not None:
         raise ValueError(f"transpose must be 'device' or None; "
                          f"got {transpose!r}")

@@ -16,15 +16,27 @@ N_nzr for which accelerator spMVM is worthwhile given the ratio
 B_dev/B_link; identical math bounds when a TPU chip's spMVM is worth the
 ICI halo traffic.
 
-Also hosts the three-term roofline used by EXPERIMENTS.md §Roofline.
+Also hosts the three-term roofline used by EXPERIMENTS.md §Roofline,
+and the CALIBRATION layer: the spec numbers above are data-sheet values,
+but ``repro.tune`` fits an effective bandwidth scale and a per-format
+fixed overhead from MEASURED spMVM rows (``tune.calibrate``), installs
+them here (:func:`set_calibration`), and every
+:func:`predicted_spmv_seconds` call — including the dispatch heuristic
+``kernels.ops.select_format`` — then prices candidates against the
+machine that was actually measured instead of the data sheet.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Mapping, Optional
 
 __all__ = [
     "TPUSpec",
     "TPU_V5E",
+    "Calibration",
+    "set_calibration",
+    "get_calibration",
+    "clear_calibration",
     "code_balance",
     "alpha_range",
     "t_mvm",
@@ -61,6 +73,53 @@ TPU_V5E = TPUSpec(
     vmem_bytes=128 * 2 ** 20,
     hbm_bytes=16 * 2 ** 30,
 )
+
+
+# ------------------------------------------------------------- calibration
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Measured correction to the memory-bound time model.
+
+    ``predicted = bytes / (spec.hbm_bw * bw_scale) + overhead_s[fmt]``
+
+    ``bw_scale`` is the ratio of the EFFECTIVE streaming bandwidth the
+    measured kernel achieved to the spec's data-sheet number (off-TPU it
+    absorbs the CPU-vs-TPU gap wholesale, so the model still ranks
+    candidates on the machine that was measured); ``overhead_s`` is a
+    per-format fixed launch/epilogue cost in seconds (missing formats
+    cost 0).  Fit by ``repro.tune.calibrate.fit_calibration`` from
+    measured rows; ``source`` records where the rows came from.
+    """
+
+    bw_scale: float
+    overhead_s: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    source: str = ""
+
+    def __post_init__(self):
+        if not (self.bw_scale > 0):
+            raise ValueError(f"bw_scale must be > 0; got {self.bw_scale}")
+
+
+_CALIBRATION: Optional[Calibration] = None
+
+
+def set_calibration(cal: Optional[Calibration]) -> None:
+    """Install ``cal`` as the process-wide default calibration: every
+    subsequent :func:`predicted_spmv_seconds` call without an explicit
+    ``calibration=`` argument uses it (including the ones inside
+    ``kernels.ops.select_format``).  ``None`` uninstalls."""
+    global _CALIBRATION
+    if cal is not None and not isinstance(cal, Calibration):
+        raise TypeError(f"expected Calibration or None; got {type(cal)}")
+    _CALIBRATION = cal
+
+
+def get_calibration() -> Optional[Calibration]:
+    return _CALIBRATION
+
+
+def clear_calibration() -> None:
+    set_calibration(None)
 
 
 # ---------------------------------------------------------------- Eq. (1)
@@ -190,7 +249,9 @@ def predicted_spmv_seconds(stored_elements: int, n_rows: int, n_nzr: float,
                            index_bytes: int = 4,
                            x_tiles: int = 1,
                            n_row_blocks: int = 1,
-                           vec_bytes: int | None = None) -> float:
+                           vec_bytes: int | None = None,
+                           fmt: str | None = None,
+                           calibration="default") -> float:
     """Memory-bound time estimate of one spMVM in a candidate format —
     the quantity ``kernels.ops.select_format`` minimises.  Uses the
     enforced alpha -> 1/N_nzr limit (VMEM-resident RHS, DESIGN.md §2);
@@ -198,13 +259,26 @@ def predicted_spmv_seconds(stored_elements: int, n_rows: int, n_nzr: float,
     scalar gather stream cannot saturate HBM).  ``value_bytes`` /
     ``index_bytes`` are the STORED stream widths, ``vec_bytes`` the
     uncompressed RHS/LHS width, and ``x_tiles`` / ``n_row_blocks``
-    price the column-blocked-x grid — see :func:`spmvm_bytes`."""
+    price the column-blocked-x grid — see :func:`spmvm_bytes`.
+
+    ``calibration`` applies a measured :class:`Calibration` — effective
+    bandwidth scale plus the per-format overhead looked up by ``fmt`` —
+    on top of the structural byte model; the default picks up whatever
+    :func:`set_calibration` installed (``None`` forces the uncalibrated
+    data-sheet estimate)."""
     n_nzr = max(n_nzr, 1e-9)
     alpha = 1.0 / n_nzr
     b = spmvm_bytes(stored_elements, n_rows, alpha, n_nzr,
                     value_bytes, index_bytes, x_tiles, n_row_blocks,
                     vec_bytes)
-    return (b * irregular_factor + perm_bytes) / spec.hbm_bw
+    t = (b * irregular_factor + perm_bytes) / spec.hbm_bw
+    if calibration == "default":
+        calibration = _CALIBRATION
+    if calibration is not None:
+        t = t / calibration.bw_scale
+        if fmt is not None:
+            t += calibration.overhead_s.get(fmt, 0.0)
+    return max(t, 0.0)
 
 
 @dataclasses.dataclass

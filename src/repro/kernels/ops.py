@@ -68,6 +68,7 @@ __all__ = [
 
 Backend = Literal["auto", "kernel", "ref"]
 FormatName = Literal["auto", "csr", "ellpack_r", "pjds", "sell"]
+Tune = Literal["off", "auto", "force"]
 
 
 def resolve_backend(backend: Backend) -> str:
@@ -387,19 +388,19 @@ def select_format(
     candidates = {
         "ellpack_r": PM.predicted_spmv_seconds(
             ell_elems, n, n_nzr, spec=spec, value_bytes=vb, index_bytes=ib,
-            vec_bytes=vecb),
+            vec_bytes=vecb, fmt="ellpack_r"),
         "sell": PM.predicted_spmv_seconds(
             F.estimate_storage_elements(rl, "sell", b_r, diag_align, sigma),
             n, n_nzr,
             perm_bytes=PM.perm_traffic_bytes(n, vecb, window_local=True),
             spec=spec, value_bytes=vb, index_bytes=ib, vec_bytes=vecb,
-            x_tiles=x_tiles, n_row_blocks=n_row_blocks),
+            x_tiles=x_tiles, n_row_blocks=n_row_blocks, fmt="sell"),
         "pjds": PM.predicted_spmv_seconds(
             F.estimate_storage_elements(rl, "pjds", b_r, diag_align),
             n, n_nzr,
             perm_bytes=PM.perm_traffic_bytes(n, vecb, window_local=False),
             spec=spec, value_bytes=vb, index_bytes=ib, vec_bytes=vecb,
-            x_tiles=x_tiles, n_row_blocks=n_row_blocks),
+            x_tiles=x_tiles, n_row_blocks=n_row_blocks, fmt="pjds"),
     }
     if x_tiles > 1:
         candidates.pop("ellpack_r")   # its kernel keeps x resident
@@ -607,6 +608,7 @@ def as_device(
     dtype=None,
     index_dtype="auto",
     x_tiles: Union[int, str] = "auto",
+    tune: Tune = "off",
 ) -> SparseDevice:
     """Wrap a matrix as a :class:`SparseDevice`, converting at most once.
 
@@ -632,6 +634,18 @@ def as_device(
     records the sweep); pass 8 to reproduce the old minimal-padding
     builds.
 
+    ``tune`` switches from the static heuristic to the EMPIRICAL
+    autotuner (``repro.tune``, DESIGN.md §9): ``"auto"`` looks the
+    matrix's structural fingerprint up in the persistent tuning cache,
+    measuring the pruned candidate set on a miss; ``"force"``
+    re-measures and overwrites the cached decision.  The tuned statics
+    (format, b_r, diag_align, chunk_l, sigma, x_tiles) then REPLACE the
+    corresponding arguments — an explicit ``format`` (not ``"auto"``)
+    restricts the search to that format, and the ``dtype`` /
+    ``index_dtype`` storage policy is part of the cache key, never
+    overridden.  A caller-supplied ``diag_align`` is ignored under
+    tuning: the build must match the measured geometry exactly.
+
     This is the conversion/caching layer under the operator protocol —
     new code should usually go one level up and call
     ``repro.core.operator.operator(a)``, which adds transpose,
@@ -647,6 +661,21 @@ def as_device(
         a = _dense_to_csr_cached(a)
     if not isinstance(a, F.CSRMatrix):
         raise TypeError(f"cannot dispatch on {type(a)}")
+
+    if tune not in ("off", "auto", "force"):
+        raise ValueError(f"tune must be 'off', 'auto' or 'force'; "
+                         f"got {tune!r}")
+    if tune != "off":
+        from repro import tune as T   # deferred: tune imports this module
+        best = T.autotune(a, format=format, dtype=dtype,
+                          index_dtype=index_dtype,
+                          force=(tune == "force")).best
+        # Rebuild with EXACTLY the geometry the tuner measured
+        # (Candidate.build_kwargs, which owns diag_align) — a
+        # caller-supplied diag_align would change padding out from
+        # under the cached decision.
+        return as_device(a, dtype=dtype, index_dtype=index_dtype,
+                         tune="off", **best.build_kwargs())
 
     if x_tiles == "auto":
         # Size the tile by the RUNTIME vector width (>= f32), not the
@@ -726,10 +755,13 @@ def spmv(
     path, returning (n_rows, k).  The converted device representation is
     cached, so repeated ``spmv`` calls with the same host matrix convert
     once.  ``convert_kwargs`` (b_r, diag_align, sigma, chunk_l, dtype,
-    index_dtype, x_tiles) pass through to :func:`as_device` — in
-    particular ``dtype=jnp.bfloat16`` stores a compressed value stream
-    and ``index_dtype="auto"`` (the default) compresses indices to int16
-    whenever the column span fits.
+    index_dtype, x_tiles, tune) pass through to :func:`as_device` — in
+    particular ``dtype=jnp.bfloat16`` stores a compressed value stream,
+    ``index_dtype="auto"`` (the default) compresses indices to int16
+    whenever the column span fits, and ``tune="auto"`` replaces the
+    static format/statics heuristic with the measured autotuner
+    (``repro.tune``; ``"force"`` re-measures, bypassing the persistent
+    cache).
     """
     from repro.core.operator import operator as _operator
     op = _operator(a, format=format, backend=backend, **convert_kwargs)

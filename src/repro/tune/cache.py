@@ -1,0 +1,134 @@
+"""Persistent JSON tuning cache.
+
+One file, human-readable, atomic-replace on every write.  The key
+anatomy (DESIGN.md §9) is
+
+    <structural fingerprint> / <device kind> / <dtype policy> [/ fmt=...]
+
+* **structural fingerprint** — ``formats.structural_fingerprint``: sha1
+  of shape + indptr + indices, values excluded.  Re-assembling
+  coefficients on a fixed sparsity pattern keeps the hit; any
+  structural change invalidates it.
+* **device kind** — ``measure.device_kind()``: measurements do not
+  transfer between chips.
+* **dtype policy** — the caller's storage precision contract
+  (:func:`dtype_policy`); an f32 build and a bf16+int16 build tune
+  separately.
+* an optional trailing segment narrows the entry further (a format
+  restriction, a partition geometry, ...).
+
+The cache file location is ``$REPRO_TUNE_CACHE`` when set, else
+``~/.cache/repro-spmv/tune_cache.json``.  A corrupt or
+schema-mismatched file is treated as empty, never an error — losing a
+tuning cache costs a re-measurement, not correctness.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import tempfile
+from typing import Optional
+
+import numpy as np
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "TuneCache",
+    "default_cache",
+    "cache_key",
+    "dtype_policy",
+]
+
+SCHEMA_VERSION = 1
+_ENV_VAR = "REPRO_TUNE_CACHE"
+
+
+def _default_path() -> pathlib.Path:
+    env = os.environ.get(_ENV_VAR)
+    if env:
+        return pathlib.Path(env)
+    return pathlib.Path.home() / ".cache" / "repro-spmv" / "tune_cache.json"
+
+
+def dtype_policy(dtype, index_dtype) -> str:
+    """Canonical string for the (value dtype, index dtype) storage
+    contract, e.g. ``"native+auto"`` (default build) or
+    ``"bfloat16+int16"``."""
+    v = "native" if dtype is None else np.dtype(dtype).name
+    i = "auto" if index_dtype == "auto" else np.dtype(index_dtype).name
+    return f"{v}+{i}"
+
+
+def cache_key(fingerprint: str, device: str, policy: str,
+              extra: str = "") -> str:
+    key = f"{fingerprint}/{device}/{policy}"
+    return f"{key}/{extra}" if extra else key
+
+
+class TuneCache:
+    """Lazy-loading JSON key-value store for tuning decisions.
+
+    ``get``/``put`` operate on plain JSON-serialisable dicts; ``put``
+    persists immediately via write-to-temp + ``os.replace`` so a
+    crashed process never leaves a truncated cache behind."""
+
+    def __init__(self, path: Optional[os.PathLike] = None):
+        self.path = pathlib.Path(path) if path is not None \
+            else _default_path()
+        self._entries: Optional[dict] = None
+
+    def _load(self) -> dict:
+        if self._entries is None:
+            self._entries = {}
+            try:
+                payload = json.loads(self.path.read_text())
+                if payload.get("schema") == SCHEMA_VERSION:
+                    self._entries = dict(payload.get("entries", {}))
+            except (OSError, ValueError):
+                pass
+        return self._entries
+
+    def get(self, key: str) -> Optional[dict]:
+        return self._load().get(key)
+
+    def put(self, key: str, record: dict) -> None:
+        entries = self._load()
+        entries[key] = record
+        self._flush()
+
+    def clear(self) -> None:
+        self._entries = {}
+        self._flush()
+
+    def __len__(self) -> int:
+        return len(self._load())
+
+    def _flush(self) -> None:
+        payload = {"schema": SCHEMA_VERSION, "entries": self._entries}
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                   prefix=self.path.name, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+                f.write("\n")
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+
+_DEFAULT: Optional[TuneCache] = None
+
+
+def default_cache() -> TuneCache:
+    """The process-wide cache at the default path (the instance is
+    shared so repeated ``tune="auto"`` calls load the file once)."""
+    global _DEFAULT
+    if _DEFAULT is None or _DEFAULT.path != _default_path():
+        _DEFAULT = TuneCache()
+    return _DEFAULT

@@ -1,0 +1,130 @@
+"""Calibration: fit the perf model's free terms from measured rows.
+
+The structural byte model (``perf_model.spmvm_bytes``) is exact about
+WHAT streams; what it guesses at is the rate (the data-sheet bandwidth
+is an upper bound no kernel hits) and the per-launch cost each format
+pays outside the streaming loop.  Both are fit here from measured rows
+
+    { "fmt": ..., "model_s": <uncalibrated predicted seconds>,
+      "measured_s": <median measured seconds> }
+
+as the two-parameter-family ``measured ~ model_s / bw_scale +
+overhead_s[fmt]`` by weighted least squares in RELATIVE error
+(weights 1/measured, so a 10 us row and a 10 ms row count equally —
+the tuner cares about ranking across sizes, not absolute microseconds).
+The fit is coordinate descent (scale <-> per-format offsets, offsets
+clamped >= 0), each step of which is an exact 1-D minimiser, so the
+relative RMS error :func:`model_error` reports is monotonically
+non-increasing — calibrating on a row set can only improve the model's
+fit on it (the property ``tests/test_tune.py`` pins down and
+``benchmarks/bench_tune.py`` guards on the BENCH_kernels roofline rows).
+
+The fitted :class:`perf_model.Calibration` is installed process-wide
+with ``perf_model.set_calibration``, after which every pricing call —
+``select_format``, ``tune.space.price_candidate``, roofline reports —
+tracks the machine that was measured instead of the data sheet.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import perf_model as PM
+
+__all__ = [
+    "fit_calibration",
+    "model_error",
+    "rows_from_bench_kernels",
+    "fit_from_bench_kernels",
+]
+
+_FIT_SWEEPS = 3      # coordinate-descent passes (each pass is monotone)
+
+
+def _predict(rows, calibration: Optional[PM.Calibration]) -> np.ndarray:
+    model = np.asarray([r["model_s"] for r in rows], dtype=np.float64)
+    if calibration is None:
+        return model
+    off = np.asarray([calibration.overhead_s.get(r["fmt"], 0.0)
+                      for r in rows], dtype=np.float64)
+    return model / calibration.bw_scale + off
+
+
+def model_error(rows: Sequence[dict],
+                calibration: Optional[PM.Calibration] = None) -> float:
+    """Root-mean-square RELATIVE error of the (optionally calibrated)
+    prediction against the measured rows — the quantity
+    :func:`fit_calibration` minimises."""
+    rows = list(rows)
+    if not rows:
+        raise ValueError("no rows")
+    meas = np.asarray([r["measured_s"] for r in rows], dtype=np.float64)
+    if np.any(meas <= 0):
+        raise ValueError("measured_s must be positive")
+    rel = (_predict(rows, calibration) - meas) / meas
+    return float(np.sqrt(np.mean(rel ** 2)))
+
+
+def fit_calibration(rows: Sequence[dict], source: str = "") -> PM.Calibration:
+    """Fit ``(bw_scale, overhead_s)`` to measured rows (see the module
+    docstring).  Raises on empty/degenerate input; a single row still
+    fits (scale only)."""
+    rows = list(rows)
+    if not rows:
+        raise ValueError("cannot calibrate from zero rows")
+    t = np.asarray([r["measured_s"] for r in rows], dtype=np.float64)
+    m = np.asarray([r["model_s"] for r in rows], dtype=np.float64)
+    if np.any(t <= 0) or np.any(m <= 0):
+        raise ValueError("model_s and measured_s must be positive")
+    fmts = sorted({r["fmt"] for r in rows})
+    fmt_of = np.asarray([fmts.index(r["fmt"]) for r in rows])
+    w2 = 1.0 / t ** 2                       # relative-error weights
+
+    # measured ~ a * model + c[fmt], a > 0, c >= 0.
+    a = float(np.sum(w2 * t * m) / np.sum(w2 * m * m))
+    c = np.zeros(len(fmts))
+    for _ in range(_FIT_SWEEPS):
+        resid = t - a * m
+        for i in range(len(fmts)):
+            sel = fmt_of == i
+            c[i] = max(0.0, float(np.sum(w2[sel] * resid[sel])
+                                  / np.sum(w2[sel])))
+        a_new = float(np.sum(w2 * (t - c[fmt_of]) * m)
+                      / np.sum(w2 * m * m))
+        if a_new > 0:
+            a = a_new
+    return PM.Calibration(
+        bw_scale=1.0 / a,
+        overhead_s={f: float(ci) for f, ci in zip(fmts, c) if ci > 0.0},
+        source=source,
+    )
+
+
+# --------------------------------------------------------------------------
+# BENCH_kernels.json adapter (the committed roofline rows)
+# --------------------------------------------------------------------------
+def rows_from_bench_kernels(path) -> list[dict]:
+    """Extract calibration rows from a ``BENCH_kernels.json`` produced
+    by ``benchmarks/bench_kernels.py``: its ``bytes_per_nnz`` rows carry
+    the uncalibrated prediction (``predicted_s``) next to the measured
+    ref time (``measured_ref_s``) per format and storage variant."""
+    payload = json.loads(pathlib.Path(path).read_text())
+    out = []
+    for r in payload.get("rows", []):
+        if r.get("kind") != "bytes_per_nnz":
+            continue
+        if r.get("predicted_s", 0) > 0 and r.get("measured_ref_s", 0) > 0:
+            out.append(dict(fmt=r["fmt"], model_s=float(r["predicted_s"]),
+                            measured_s=float(r["measured_ref_s"])))
+    return out
+
+
+def fit_from_bench_kernels(path, source: Optional[str] = None
+                           ) -> PM.Calibration:
+    rows = rows_from_bench_kernels(path)
+    if not rows:
+        raise ValueError(f"no usable roofline rows in {path}")
+    return fit_calibration(rows, source=source or f"bench_kernels:{path}")

@@ -1,0 +1,137 @@
+"""Measurement harness: warmup + median-of-n timing of a candidate build.
+
+The timing discipline matches ``benchmarks/common.time_fn``: jit once,
+run ``warmup`` calls to flush compilation and device caches, then take
+the MEDIAN of ``iters`` blocked wall-clock samples (the median is robust
+to the one-off scheduler hiccups that would otherwise make two tuner
+runs disagree).
+
+Off-TPU the Pallas kernels only execute in interpret mode — Python per
+grid step — whose wall-time says nothing about the compiled kernel, so
+the harness falls back to timing the jitted REF path instead
+(``kernels.ops.resolve_backend("auto")`` makes the same call).  The
+layout statics still matter there: padding, storage volume and the
+permutation epilogue all show up in the ref's runtime, which is exactly
+the structural signal the off-TPU tuner can act on.  On TPU the
+compiled kernels themselves are timed.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats as F
+from repro.kernels import ops
+from .space import Candidate
+
+__all__ = [
+    "median_seconds",
+    "measurement_backend",
+    "device_kind",
+    "prepare_candidate",
+    "measure_candidate",
+    "ab_compare",
+]
+
+MEASURE_SEED = 0       # deterministic RHS for every measurement
+
+
+def median_seconds(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median blocked wall-clock seconds per call."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def measurement_backend() -> str:
+    """``"kernel"`` on TPU (compiled Pallas), ``"ref"`` elsewhere — see
+    the module docstring for why interpret mode is never timed."""
+    return ops.resolve_backend("auto")
+
+
+def device_kind() -> str:
+    """Cache-key component identifying the hardware the measurement ran
+    on: platform plus the concrete device kind (tuned statics do not
+    transfer between chips — that is the point of measuring)."""
+    d = jax.devices()[0]
+    return f"{jax.default_backend()}:{getattr(d, 'device_kind', 'unknown')}"
+
+
+def prepare_candidate(
+    m: F.CSRMatrix,
+    c: Candidate,
+    *,
+    dtype=None,
+    index_dtype="auto",
+):
+    """Build candidate ``c``'s device representation and return a
+    nullary callable running one dispatched spMVM on the deterministic
+    RHS (jitted once; conversion is NOT timed — it amortises over the
+    operator's lifetime and the conversion cache)."""
+    sd = ops.as_device(m, dtype=dtype, index_dtype=index_dtype,
+                       **c.build_kwargs())
+    backend = measurement_backend()
+    rng = np.random.default_rng(MEASURE_SEED)
+    x = jnp.asarray(rng.standard_normal(m.shape[1]).astype(np.float32))
+    f = jax.jit(lambda v: sd.matvec(v, backend=backend))
+    return lambda: f(x)
+
+
+def measure_candidate(
+    m: F.CSRMatrix,
+    c: Candidate,
+    *,
+    dtype=None,
+    index_dtype="auto",
+    warmup: int = 1,
+    iters: int = 5,
+) -> float:
+    """Median seconds of one dispatched spMVM through candidate ``c``'s
+    device build."""
+    return median_seconds(prepare_candidate(m, c, dtype=dtype,
+                                            index_dtype=index_dtype),
+                          warmup=warmup, iters=iters)
+
+
+def ab_compare(
+    m: F.CSRMatrix,
+    a: Candidate,
+    b: Candidate,
+    *,
+    dtype=None,
+    index_dtype="auto",
+    rounds: int = 7,
+    iters: int = 3,
+    warmup: int = 2,
+) -> tuple[float, float]:
+    """Drift-robust paired timing of two candidates: alternate the two
+    builds round by round (order flipped every round) and keep each
+    side's MINIMUM round median.  One-sided timing is poisoned by slow
+    drift — background load, thermal/frequency state — that lands
+    entirely on whichever side ran later; interleaving puts both sides
+    under the same drift and the min discards the inflated rounds.
+    Used for the guarded tuned-vs-heuristic comparison in
+    ``benchmarks/bench_tune.py``."""
+    fa = prepare_candidate(m, a, dtype=dtype, index_dtype=index_dtype)
+    fb = prepare_candidate(m, b, dtype=dtype, index_dtype=index_dtype)
+    for f in (fa, fb):
+        for _ in range(warmup):
+            jax.block_until_ready(f())
+    ta, tb = np.inf, np.inf
+    for r in range(rounds):
+        order = ((0, fa), (1, fb)) if r % 2 == 0 else ((1, fb), (0, fa))
+        for side, f in order:
+            t = median_seconds(f, warmup=0, iters=iters)
+            if side == 0:
+                ta = min(ta, t)
+            else:
+                tb = min(tb, t)
+    return float(ta), float(tb)

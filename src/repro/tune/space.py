@@ -1,0 +1,253 @@
+"""Search-space enumeration + model-based pruning for the autotuner.
+
+The kernel-static space after the PR-4 bandwidth overhaul is
+``format x b_r x chunk_l x sigma x x_tiles`` (times the dtype policy,
+which is an INPUT here, not a search axis: the caller's storage
+precision is a contract, the tuner only picks layout statics for it).
+Measuring the full cross product would take seconds per matrix, so the
+space is pruned with the same ``perf_model`` pricing the static
+dispatch heuristic uses — candidates whose predicted memory-bound time
+is hopeless never get measured — with one guarantee the tuner's
+correctness story rests on: :func:`prune_candidates` NEVER drops the
+heuristic default (``kernels.ops.as_device``'s no-tuning build), so the
+measured winner can only tie or beat what dispatch would have picked.
+
+All legality constraints live in one place (:func:`enumerate_candidates`)
+and mirror the converters': ``diag_align`` is raised to ``chunk_l``
+exactly as ``as_device`` does, ``sigma`` is a SELL-only axis capped at
+the padded row count (where it degenerates to the pJDS global sort),
+and ``x_tiles > 1`` is offered only to the formats whose kernels can
+column-block the RHS (sell/pjds — same restriction as
+``select_format``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import formats as F
+from repro.core import perf_model as PM
+from repro.kernels import ops
+
+__all__ = [
+    "Candidate",
+    "heuristic_candidate",
+    "enumerate_candidates",
+    "price_candidate",
+    "prune_candidates",
+]
+
+# Default search axes.  Deliberately small: the point of the model-based
+# prune is that ENUMERATION can stay generous while MEASUREMENT stays
+# top-k; these are the values the converters are known to like on the
+# (8, 128) register tile (DESIGN.md §2).
+B_R_OPTIONS = (32, 64, 128)
+CHUNK_L_OPTIONS = (8, 16, 32)
+SIGMA_FACTORS = (1, 4, 8, 32)      # sigma = factor * b_r, capped at n_pad
+
+_DEFAULT_B_R = 128                 # as_device defaults — the heuristic build
+_DEFAULT_CHUNK_L = 16
+_DEFAULT_DIAG_ALIGN = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One point of the kernel-static search space: everything
+    ``kernels.ops.as_device`` needs beyond the matrix and the dtype
+    policy.  ``sigma`` is meaningful for sell only (None elsewhere);
+    hashable/frozen so candidate sets dedupe, JSON-roundtrippable so
+    the persistent cache can store the winning point."""
+
+    fmt: str
+    b_r: int = _DEFAULT_B_R
+    chunk_l: int = _DEFAULT_CHUNK_L
+    sigma: Optional[int] = None
+    x_tiles: int = 1
+
+    def build_kwargs(self) -> dict:
+        """Keyword arguments for ``ops.as_device`` (minus the dtype
+        policy, which the caller owns)."""
+        return dict(
+            format=self.fmt,
+            b_r=self.b_r,
+            diag_align=max(_DEFAULT_DIAG_ALIGN, self.chunk_l),
+            sigma=self.sigma,
+            chunk_l=self.chunk_l,
+            x_tiles=self.x_tiles,
+        )
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Candidate":
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
+
+    def label(self) -> str:
+        sig = f" sigma={self.sigma}" if self.sigma is not None else ""
+        xt = f" x_tiles={self.x_tiles}" if self.x_tiles != 1 else ""
+        return f"{self.fmt} b_r={self.b_r} chunk_l={self.chunk_l}{sig}{xt}"
+
+
+def _auto_x_tiles(m: F.CSRMatrix) -> int:
+    # Same rule as as_device: the tile is sized by the RUNTIME vector
+    # width (>= f32), whatever the stored value width.
+    return ops.choose_x_tiles(m.shape[1], max(4, m.data.dtype.itemsize))
+
+
+def heuristic_candidate(
+    m: F.CSRMatrix,
+    format: str = "auto",
+    dtype=None,
+    index_dtype="auto",
+) -> Candidate:
+    """The exact build ``as_device`` produces with default statics and
+    ``tune="off"`` — the baseline every tuned decision is benchmarked
+    against, and the candidate :func:`prune_candidates` may never drop."""
+    auto_t = _auto_x_tiles(m)
+    da = max(_DEFAULT_DIAG_ALIGN, _DEFAULT_CHUNK_L)
+    fmt = format
+    if fmt == "auto":
+        fmt = ops.select_format(m, b_r=_DEFAULT_B_R, diag_align=da,
+                                sigma=None, value_dtype=dtype,
+                                index_dtype=index_dtype, x_tiles=auto_t)
+    sigma = None
+    if fmt == "sell":
+        sigma = min(8 * _DEFAULT_B_R,
+                    _pad_to(max(m.n_rows, 1), _DEFAULT_B_R))
+    return Candidate(
+        fmt=fmt,
+        b_r=_DEFAULT_B_R,
+        chunk_l=_DEFAULT_CHUNK_L,
+        sigma=sigma,
+        x_tiles=auto_t if fmt in ("sell", "pjds") else 1,
+    )
+
+
+def _pad_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def enumerate_candidates(
+    m: F.CSRMatrix,
+    format: str = "auto",
+    dtype=None,
+    index_dtype="auto",
+    b_r_options: Sequence[int] = B_R_OPTIONS,
+    chunk_l_options: Sequence[int] = CHUNK_L_OPTIONS,
+    sigma_factors: Sequence[int] = SIGMA_FACTORS,
+) -> list[Candidate]:
+    """All legal kernel-static points for ``m`` under the given format
+    restriction (``format != "auto"`` collapses the format axis).  The
+    heuristic default is always a member.  Degenerate matrices (empty,
+    or too few rows to fill one block at the smallest b_r) collapse to
+    the CSR baseline."""
+    heur = heuristic_candidate(m, format, dtype, index_dtype)
+    n = m.n_rows
+    if m.nnz == 0 or n < ops._CSR_MIN_ROWS_FACTOR * min(b_r_options):
+        return list(dict.fromkeys([Candidate(fmt="csr"), heur]))
+
+    fmts = (["csr", "ellpack_r", "pjds", "sell"] if format == "auto"
+            else [format])
+    auto_t = _auto_x_tiles(m)
+    out = [heur]
+    for fmt in fmts:
+        if fmt == "csr":
+            out.append(Candidate(fmt="csr"))
+            continue
+        # x cannot be VMEM-resident -> only the column-blocking kernels
+        # may run (mirrors select_format's restriction); when it CAN be
+        # resident, offering the tiled grid would only add re-read
+        # traffic, so the resident build is the sole option.
+        if fmt in ("sell", "pjds"):
+            tile_opts = sorted({auto_t} | ({1} if auto_t == 1 else
+                                           {auto_t, 2 * auto_t}))
+        else:
+            if auto_t > 1:
+                continue
+            tile_opts = [1]
+        for b_r in b_r_options:
+            if n < ops._CSR_MIN_ROWS_FACTOR * b_r:
+                continue       # block padding dominates; csr covers this
+            sigmas = [None]
+            if fmt == "sell":
+                n_pad = _pad_to(n, b_r)
+                sigmas = sorted({min(f * b_r, n_pad)
+                                 for f in sigma_factors})
+            for chunk_l in chunk_l_options:
+                for sigma in sigmas:
+                    for xt in tile_opts:
+                        out.append(Candidate(fmt=fmt, b_r=b_r,
+                                             chunk_l=chunk_l, sigma=sigma,
+                                             x_tiles=xt))
+    return list(dict.fromkeys(out))
+
+
+def price_candidate(
+    m: F.CSRMatrix,
+    c: Candidate,
+    *,
+    dtype=None,
+    index_dtype="auto",
+    spec: PM.TPUSpec = PM.TPU_V5E,
+    calibration="default",
+) -> float:
+    """Predicted memory-bound spMVM seconds of candidate ``c`` on ``m``
+    — the same ``perf_model`` pricing ``select_format`` uses, extended
+    over the full static space.  ``calibration=None`` forces the
+    uncalibrated data-sheet model (what the calibration fit needs as
+    its regressor); the default picks up any installed calibration."""
+    n, n_nzr = m.n_rows, m.n_nzr
+    vecb = max(4, m.data.dtype.itemsize)
+    if c.fmt == "csr":
+        vb = m.data.dtype.itemsize if dtype is None else np.dtype(dtype).itemsize
+        # CSRDevice streams indices AND row ids per nnz (8 index bytes).
+        return PM.predicted_spmv_seconds(
+            m.nnz, n, n_nzr, irregular_factor=ops._CSR_IRREGULAR_FACTOR,
+            spec=spec, value_bytes=vb, index_bytes=8, vec_bytes=vecb,
+            fmt="csr", calibration=calibration)
+    rl = m.row_lengths()
+    vb = np.dtype(dtype).itemsize if dtype is not None \
+        else m.data.dtype.itemsize
+    ib = F.resolve_index_dtype(index_dtype, m.shape[1]).itemsize
+    da = max(_DEFAULT_DIAG_ALIGN, c.chunk_l)
+    elems = F.estimate_storage_elements(rl, c.fmt, c.b_r, da, c.sigma)
+    perm_bytes = 0.0
+    if c.fmt in ("sell", "pjds"):
+        perm_bytes = PM.perm_traffic_bytes(
+            n, vecb, window_local=(c.fmt == "sell"))
+    return PM.predicted_spmv_seconds(
+        elems, n, n_nzr, perm_bytes=perm_bytes, spec=spec,
+        value_bytes=vb, index_bytes=ib, vec_bytes=vecb,
+        x_tiles=c.x_tiles, n_row_blocks=-(-n // c.b_r),
+        fmt=c.fmt, calibration=calibration)
+
+
+def prune_candidates(
+    m: F.CSRMatrix,
+    candidates: Sequence[Candidate],
+    *,
+    top_k: int = 6,
+    dtype=None,
+    index_dtype="auto",
+    spec: PM.TPUSpec = PM.TPU_V5E,
+    heuristic: Optional[Candidate] = None,
+) -> list[Candidate]:
+    """Keep the ``top_k`` model-cheapest candidates, ALWAYS including
+    the heuristic default (appended back if the model would drop it —
+    the guarantee that tuning can never do worse than dispatch by more
+    than measurement noise).  Ordered cheapest-predicted first."""
+    if heuristic is None:
+        heuristic = heuristic_candidate(m, dtype=dtype,
+                                        index_dtype=index_dtype)
+    priced = sorted(
+        dict.fromkeys(candidates),
+        key=lambda c: price_candidate(m, c, dtype=dtype,
+                                      index_dtype=index_dtype, spec=spec))
+    kept = priced[: max(top_k, 1)]
+    if heuristic not in kept:
+        kept.append(heuristic)
+    return kept

@@ -56,6 +56,7 @@ def test_leaf_count_mismatch_raises(tmp_path):
         store.restore(str(tmp_path), 1, {"only": t["a"]})
 
 
+@pytest.mark.dist
 def test_elastic_reshard_subprocess(tmp_path):
     """Save on an 8-device mesh, restore onto a 4-device mesh — the
     node-failure recovery path."""

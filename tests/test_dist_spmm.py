@@ -15,6 +15,8 @@ import pytest
 
 from repro.core import dist_spmv as D, formats as F, matrices as M
 
+pytestmark = pytest.mark.dist
+
 
 # --------------------------------------------------------------------------
 # Host-side: gather sets and communication accounting

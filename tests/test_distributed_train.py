@@ -10,6 +10,8 @@ import textwrap
 
 import pytest
 
+pytestmark = [pytest.mark.dist, pytest.mark.slow]
+
 _SCRIPT = textwrap.dedent("""
     import os, json, tempfile
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

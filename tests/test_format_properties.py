@@ -1,0 +1,134 @@
+"""Property-based format roundtrip tests (hypothesis; the deterministic
+``_compat`` fallback stands in when the real package is absent).
+
+The invariant under test is the foundation everything else builds on:
+for ANY csr matrix, converting to each blocked format and densifying
+recovers exactly the dense matrix the CSR describes — including the
+structures the converters' padding logic finds hardest (empty rows,
+all-zero matrices, row-length cliffs) and the index-compression
+boundary (column spans straddling 2**15, where ``index_dtype="auto"``
+flips between int16 and int32).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats as F
+
+INT16_SPAN = 2 ** 15          # resolve_index_dtype's int16/int32 boundary
+
+
+def _random_dense(seed, n, pattern, empty_frac):
+    """Small random square matrix with structurally diverse sparsity."""
+    rng = np.random.default_rng(seed)
+    if pattern == "banded":
+        d = np.abs(np.subtract.outer(np.arange(n), np.arange(n)))
+        a = np.where(d <= 5, rng.standard_normal((n, n)), 0.0)
+    elif pattern == "powerlaw":
+        rl = np.clip(rng.zipf(1.7, size=n), 1, max(n // 4, 2))
+        a = np.zeros((n, n))
+        for i in range(n):
+            a[i, rng.integers(0, n, size=rl[i])] = rng.standard_normal(rl[i])
+    else:
+        a = (rng.random((n, n)) < 0.07) * rng.standard_normal((n, n))
+    # force a block of EMPTY rows (the padding paths must represent them)
+    n_empty = int(empty_frac * n)
+    if n_empty:
+        a[rng.choice(n, size=n_empty, replace=False)] = 0.0
+    return a.astype(np.float32)
+
+
+def _roundtrip_all(a, b_r, sigma_factor):
+    """csr -> {ellr, pjds, sell} -> dense must equal csr -> dense."""
+    m = F.csr_from_dense(a)
+    dense = F.csr_to_dense(m)
+    np.testing.assert_array_equal(dense, a)
+
+    e = F.csr_to_ell(m, row_align=b_r, diag_align=8)
+    np.testing.assert_array_equal(F.ell_to_dense(e), a)
+
+    square = m.shape[0] == m.shape[1]
+    for permuted_cols in ((False, True) if square else (False,)):
+        p = F.csr_to_pjds(m, b_r=b_r, permuted_cols=permuted_cols)
+        np.testing.assert_array_equal(F.pjds_to_dense(p), a)
+        s = F.csr_to_sell(m, c=b_r, sigma=sigma_factor * b_r,
+                          permuted_cols=permuted_cols)
+        np.testing.assert_array_equal(F.sell_to_dense(s), a)
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2 ** 16),
+       n=st.sampled_from([17, 48, 96, 130]),
+       pattern=st.sampled_from(["banded", "powerlaw", "uniform"]),
+       empty_frac=st.sampled_from([0.0, 0.2]),
+       b_r=st.sampled_from([8, 16, 32]),
+       sigma_factor=st.sampled_from([1, 4]))
+def test_roundtrip_random(seed, n, pattern, empty_frac, b_r, sigma_factor):
+    _roundtrip_all(_random_dense(seed, n, pattern, empty_frac),
+                   b_r, sigma_factor)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.sampled_from([3, 16, 40]), b_r=st.sampled_from([8, 32]))
+def test_roundtrip_all_zero(n, b_r):
+    """nnz == 0: every converter must still build (padding floors at one
+    jagged diagonal) and densify back to zeros."""
+    a = np.zeros((n, n), np.float32)
+    _roundtrip_all(a, b_r, sigma_factor=4)
+    m = F.csr_from_dense(a)
+    assert m.nnz == 0
+    assert F.storage_elements(F.csr_to_pjds(m, b_r=b_r)) > 0   # padded, legal
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), n=st.sampled_from([24, 64]))
+def test_roundtrip_trailing_empty_rows(seed, n):
+    """Rows past the last nonzero row: the indptr tail is flat and the
+    converters' per-row loops must not read past it."""
+    rng = np.random.default_rng(seed)
+    a = np.zeros((n, n), np.float32)
+    a[: n // 3] = ((rng.random((n // 3, n)) < 0.2)
+                   * rng.standard_normal((n // 3, n))).astype(np.float32)
+    _roundtrip_all(a, b_r=8, sigma_factor=1)
+
+
+@settings(max_examples=10, deadline=None)
+@given(offset=st.sampled_from([-2, -1, 0, 1, 2]),
+       n_rows=st.sampled_from([4, 11]))
+def test_single_column_span_at_int16_boundary(offset, n_rows):
+    """All nonzeros in ONE column whose position straddles the int16
+    addressability boundary: ``index_dtype="auto"`` must pick int16
+    exactly when the span fits 2**15 and the roundtrip must be exact
+    either way (the compressed index stream loses nothing)."""
+    col = INT16_SPAN - 1 + offset
+    n_cols = col + 1
+    rows = np.arange(n_rows, dtype=np.int64)
+    vals = np.arange(1, n_rows + 1, dtype=np.float32)
+    m = F.csr_from_coo(rows, np.full(n_rows, col), vals, (n_rows, n_cols))
+
+    expect = np.dtype(np.int16) if n_cols <= INT16_SPAN else np.dtype(np.int32)
+    assert F.min_index_dtype(n_cols) == expect
+
+    e = F.csr_to_ell(m, row_align=8, diag_align=8)
+    assert e.col_idx.dtype == expect
+    dense = F.ell_to_dense(e)
+    assert dense.shape == (n_rows, n_cols)
+    np.testing.assert_array_equal(dense[:, col], vals)
+    assert np.count_nonzero(dense) == n_rows
+
+    p = F.csr_to_pjds(m, b_r=8, permuted_cols=False)
+    assert p.col_idx.dtype == expect
+    np.testing.assert_array_equal(F.pjds_to_dense(p), dense)
+
+    s = F.csr_to_sell(m, c=8, sigma=8, permuted_cols=False)
+    assert s.pjds.col_idx.dtype == expect
+    np.testing.assert_array_equal(F.sell_to_dense(s), dense)
+
+
+def test_explicit_index_dtype_narrowing_is_an_error():
+    """A lossy explicit narrowing must raise at build time, never wrap."""
+    m = F.csr_from_coo([0], [INT16_SPAN], [1.0], (4, INT16_SPAN + 1))
+    with pytest.raises(ValueError):
+        F.csr_to_ell(m, index_dtype=np.int16)
+    with pytest.raises(ValueError):
+        F.resolve_index_dtype(np.uint16, 10)      # unsigned rejected too

@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro import configs
+
+pytestmark = pytest.mark.slow    # full-architecture lowering, minutes of CPU
 from repro.models.api import build_model
 
 S, B = 32, 2

@@ -397,12 +397,14 @@ def dist_op_results():
     return json.loads(r.stdout.strip().splitlines()[-1])
 
 
+@pytest.mark.dist
 def test_dist_conformance(dist_op_results):
     for k in ("err_mv", "err_rmv", "err_grad_x", "err_mm"):
         assert dist_op_results[k] < 1e-5, (k, dist_op_results[k])
     assert dist_op_results["err_diag"] < 1e-6
 
 
+@pytest.mark.dist
 def test_solver_source_runs_on_dist_operator(dist_op_results):
     """Acceptance: the same cg/block_cg/bicgstab sources that ran on the
     DeviceOperator above converge on the mesh operator."""
