@@ -32,6 +32,7 @@ _SCRIPT = textwrap.dedent("""
     import numpy as np, jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
     from repro.core import formats as F, dist_spmv as D
+    from repro.core.operator import dist_operator
     from repro.launch.mesh import make_host_mesh
 
     n_dev = 8
@@ -78,13 +79,12 @@ _SCRIPT = textwrap.dedent("""
         for halo in ("gathered", "full"):
             comm = dist.comm_bytes_per_device(value_bytes=4, k=k, halo=halo)
             for mode in ("vector", "naive", "overlap"):
+                op = dist_operator(dist, mesh, mode=mode, halo=halo)
                 if k == 1:
-                    f = jax.jit(D.make_dist_matvec(dist, mesh, "data", mode,
-                                                   halo=halo))
+                    f = jax.jit(op.matvec)
                     arg = jax.device_put(jnp.asarray(X[:, 0]), shard)
                 else:
-                    f = jax.jit(D.make_dist_matmat(dist, mesh, "data", mode,
-                                                   halo=halo))
+                    f = jax.jit(op.matmat)
                     arg = jax.device_put(jnp.asarray(X), shard2)
                 t = timed(f, arg)
                 out["rows"].append(dict(
@@ -94,10 +94,11 @@ _SCRIPT = textwrap.dedent("""
 
     # k=4 spMM vs 4 sequential spMVMs (overlap mode, gathered halo)
     X4 = rng.standard_normal((dist.n_global_pad, 4)).astype(np.float32)
-    mm = jax.jit(D.make_dist_matmat(dist, mesh, "data", "overlap"))
+    op = dist_operator(dist, mesh, mode="overlap")
+    mm = jax.jit(op.matmat)
     arg4 = jax.device_put(jnp.asarray(X4), shard2)
     t_mm = timed(mm, arg4)
-    mv = jax.jit(D.make_dist_matvec(dist, mesh, "data", "overlap"))
+    mv = jax.jit(op.matvec)
     cols = [jax.device_put(jnp.asarray(X4[:, j]), shard) for j in range(4)]
     for c in cols:
         jax.block_until_ready(mv(c))

@@ -27,6 +27,7 @@ _SCRIPT = textwrap.dedent("""
     import numpy as np, jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
     from repro.core import matrices as M, dist_spmv as D
+    from repro.core.operator import dist_operator
     from repro.launch.mesh import make_host_mesh
 
     out = []
@@ -41,7 +42,7 @@ _SCRIPT = textwrap.dedent("""
             xj = jax.device_put(jnp.asarray(x),
                                 jax.NamedSharding(mesh, P("data")))
             for mode in ("vector", "naive", "overlap"):
-                mv = jax.jit(D.make_dist_matvec(dist, mesh, "data", mode))
+                mv = jax.jit(dist_operator(dist, mesh, mode=mode).matvec)
                 for _ in range(3):
                     jax.block_until_ready(mv(xj))
                 ts = []

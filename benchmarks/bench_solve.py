@@ -1,0 +1,268 @@
+"""Solver-iteration benchmark: composed-launch vs fused vs bf16-refined.
+
+Three ways to run the same Krylov iteration, timed per iteration on the
+paper's two application matrices (uhbr, samg at bench scale):
+
+* ``composed_launch`` — the scipy-style driver: one jitted STEP call
+  per iteration from Python, with a host residual sync each step.  This
+  is the baseline an application using the pre-``repro.solve`` pieces
+  naturally writes, and the one the fused path is judged against.
+* ``fused`` — ``repro.solve``'s fused strategy: the whole solve is one
+  compiled ``while_loop`` whose body is the fused spMV+dots pass
+  (``kernels.fused_iter``); no per-iteration dispatch, no per-iteration
+  host sync, no standalone reduction passes.
+* ``fused+bf16`` — the fused iteration over the bf16+int16 operand
+  (0.50x bytes/nnz) inside mixed-precision refinement; per-iteration
+  time shows the storage-bandwidth win, and a separate convergence row
+  shows refinement still reaching the f32 tolerance.
+
+Each row also carries the perf model's bytes/iteration
+(``perf_model.solver_iteration_bytes`` — spMV streams PLUS the carrier
+vector passes) so predicted-vs-measured stays honest.
+
+Regression guards (SystemExit):
+* fused must be >= MIN_FUSED_SPEEDUP x composed_launch per iteration on
+  at least one matrix;
+* bf16-inner refinement must reach REFINE_TOL true relative residual in
+  <= MAX_REFINED_ITER_RATIO x the f32 iteration count (on the SPD
+  matrix, where CG converges).
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api
+from repro.core import formats as F
+from repro.core import matrices as M
+from repro.core import perf_model as PM
+from repro.core import solvers as S
+from repro.core.operator import operator
+
+from .common import csv_row, seeded_rng, write_bench_json
+
+PROBE_ITERS = 100          # fixed-length probes: every strategy runs the same
+                           # count, long enough to amortise both paths' fixed
+                           # ends (compile-cache lookup + the fused driver's
+                           # certification pass) into steady-state per-iter cost
+TIME_ROUNDS = 3            # median-of-n probe timings
+MIN_FUSED_SPEEDUP = 1.3    # per-iteration, vs composed_launch, >= 1 matrix
+REFINE_TOL = 1e-6
+MAX_REFINED_ITER_RATIO = 1.5
+
+# samg is sized to a strong-scaled PER-DEVICE partition — 3.4M rows
+# over the O(1000)-GPU scaling runs the paper targets leaves ~1k rows
+# per device, the regime where iteration cost is launch/sync-bound and
+# fusing the launches is the whole point.  uhbr stays at the usual
+# bench scale as the compute-bound contrast, where fusion is judged on
+# bytes alone and dispatch savings wash out.
+_MATRICES = (
+    ("samg", lambda: M.samg(scale=0.00025), "cg"),      # SPD -> CG
+    ("uhbr", lambda: M.uhbr(scale=0.003), "bicgstab"),  # nonsymmetric
+)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _cg_step(matvec, x, r, p, rs):
+    ap = matvec(p)
+    alpha = rs / jnp.vdot(p, ap)
+    x = x + alpha * p
+    r = r - alpha * ap
+    rs_new = jnp.vdot(r, r)
+    p = r + (rs_new / rs) * p
+    return x, r, p, rs_new
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _bicgstab_step(matvec, x, r, rhat, p, v, rho, alpha, omega):
+    tiny = jnp.asarray(1e-30, r.dtype)
+    safe = lambda d: jnp.where(jnp.abs(d) > tiny, d, tiny)
+    rho_new = jnp.vdot(rhat, r)
+    beta = (rho_new / safe(rho)) * (alpha / safe(omega))
+    p = r + beta * (p - omega * v)
+    v = matvec(p)
+    alpha = rho_new / safe(jnp.vdot(rhat, v))
+    s = r - alpha * v
+    t = matvec(s)
+    omega = jnp.vdot(t, s) / safe(jnp.vdot(t, t))
+    x = x + alpha * p + omega * s
+    r = s - omega * t
+    return x, r, p, v, rho_new, alpha, omega, jnp.vdot(r, r)
+
+
+def composed_launch_solve(op, b, method, maxiter, tol):
+    """The per-step dispatch baseline: one jitted step per iteration
+    driven from Python, residual synced to the host every step (what a
+    scipy-style caller does with the composed pieces)."""
+    mv = S._matvec_of(op)
+    b2 = max(float(jnp.vdot(b, b)), 1e-30)
+    x = jnp.zeros_like(b)
+    r = b
+    k = 0
+    # tol <= 0 is the fixed-length probe contract (solvers._not_done):
+    # the residual is still synced to the host every step — that IS the
+    # per-iteration cost being measured — but never ends the loop early.
+    if method == "cg":
+        p, rs = r, jnp.vdot(r, r)
+        while k < maxiter:
+            if float(rs) / b2 <= tol ** 2 and tol > 0.0:
+                break
+            x, r, p, rs = _cg_step(mv, x, r, p, rs)
+            k += 1
+    else:
+        rhat = r
+        p = v = jnp.zeros_like(b)
+        one = jnp.asarray(1.0, b.dtype)
+        rho = alpha = omega = one
+        rs = jnp.vdot(r, r)
+        while k < maxiter:
+            if float(rs) / b2 <= tol ** 2 and tol > 0.0:
+                break
+            x, r, p, v, rho, alpha, omega, rs = _bicgstab_step(
+                mv, x, r, rhat, p, v, rho, alpha, omega)
+            k += 1
+    jax.block_until_ready(x)
+    return x, k, float(np.sqrt(float(rs) / b2))
+
+
+def _interleaved_seconds(fns, rounds=TIME_ROUNDS):
+    """Per-probe best-of-rounds wall-clock, with the probes interleaved
+    round by round (order rotated each round) so background-load drift
+    lands on every side equally — same discipline as
+    ``tune.measure.ab_compare``."""
+    for fn in fns:                       # warmup: compile + caches
+        fn()
+    best = [float("inf")] * len(fns)
+    for r in range(rounds):
+        order = list(range(len(fns)))
+        order = order[r % len(fns):] + order[:r % len(fns)]
+        for i in order:
+            t0 = time.perf_counter()
+            fns[i]()
+            best[i] = min(best[i], time.perf_counter() - t0)
+    return best
+
+
+def _iteration_bytes(m, op, method, strategy):
+    vb = jnp.dtype(op.dev.value_dtype).itemsize
+    ib = jnp.dtype(op.dev.index_dtype).itemsize
+    return PM.solver_iteration_bytes(
+        op.dev.storage_elements(), m.n_rows, m.n_nzr, method=method,
+        strategy=strategy, value_bytes=vb, index_bytes=ib, vec_bytes=4)
+
+
+def run(print_rows=True):
+    rows = []
+    speedups = {}
+    for name, make, method in _MATRICES:
+        m = make()
+        rng = seeded_rng()
+        b = jnp.asarray(rng.standard_normal(m.n_rows).astype(np.float32))
+        op = operator(m, format="sell", x_tiles=1)
+        op_lo = operator(m, format="sell", x_tiles=1,
+                         dtype=jnp.bfloat16, index_dtype="auto")
+
+        t_launch, t_fused, t_lo = (
+            t / PROBE_ITERS for t in _interleaved_seconds([
+                lambda: composed_launch_solve(op, b, method,
+                                              PROBE_ITERS, 0.0),
+                lambda: jax.block_until_ready(api._one_solve(
+                    op, b, method=method, strategy="fused",
+                    maxiter=PROBE_ITERS, tol=0.0, precond=None).x),
+                lambda: jax.block_until_ready(api._one_solve(
+                    op_lo, b, method=method, strategy="fused",
+                    maxiter=PROBE_ITERS, tol=0.0, precond=None).x),
+            ]))
+
+        speedups[name] = t_launch / t_fused
+        for label, t, o, strat in (
+                ("composed_launch", t_launch, op, "composed"),
+                ("fused", t_fused, op, "fused"),
+                ("fused_bf16", t_lo, op_lo, "fused")):
+            by = _iteration_bytes(m, o, method, strat)
+            rows.append({
+                "name": f"solve_{method}_{name}_{label}",
+                "us_per_call": t * 1e6,
+                "derived": (f"per-iter; bytes/iter={by:.0f} "
+                            f"n={m.n_rows} n_nzr={m.n_nzr:.1f}"),
+                "seconds_per_iter": t,
+                "bytes_per_iter": by,
+                "matrix": name, "method": method, "strategy": label,
+            })
+            if print_rows:
+                print(csv_row(rows[-1]["name"], t * 1e6,
+                              rows[-1]["derived"]))
+        print(f"# {name}/{method}: fused speedup vs composed-launch = "
+              f"{speedups[name]:.2f}x; bf16 fused = "
+              f"{t_launch / t_lo:.2f}x")
+
+    # -- convergence + refinement quality (SPD matrix; CG converges) -------
+    name, make, method = _MATRICES[0]
+    m = make()
+    rng = seeded_rng()
+    b = rng.standard_normal(m.n_rows).astype(np.float32)
+    bj = jnp.asarray(b)
+    t0 = time.perf_counter()
+    res_f32 = api.solve(m, bj, method=method, tol=REFINE_TOL,
+                        maxiter=3000, tune="off", refine=False)
+    t_f32 = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res_ref = api.solve(m, bj, method=method, tol=REFINE_TOL,
+                        maxiter=3000, tune="off", dtype=jnp.bfloat16,
+                        refine="auto")
+    t_ref = time.perf_counter() - t0
+    d = F.csr_to_dense(m)
+    x_ref = np.asarray(res_ref.x)
+    true_res = float(np.linalg.norm(d @ x_ref - b) / np.linalg.norm(b))
+    it_f32, it_ref = int(res_f32.iters), int(res_ref.iters)
+    rows.append({
+        "name": f"solve_{method}_{name}_time_to_tol",
+        "us_per_call": t_ref * 1e6,
+        "derived": (f"refined: {it_ref} inner iters "
+                    f"{len(res_ref.info['refine']['rounds'])} rounds "
+                    f"true_res={true_res:.2e}; f32: {it_f32} iters "
+                    f"{t_f32 * 1e6:.0f}us"),
+        "f32_iters": it_f32, "refined_inner_iters": it_ref,
+        "refined_true_residual": true_res,
+        "f32_seconds": t_f32, "refined_seconds": t_ref,
+        "matrix": name, "method": method,
+    })
+    if print_rows:
+        print(csv_row(rows[-1]["name"], t_ref * 1e6, rows[-1]["derived"]))
+
+    path = write_bench_json("solve", rows)
+    print(f"# wrote {path}")
+
+    # -- regression guards --------------------------------------------------
+    best = max(speedups.values())
+    if best < MIN_FUSED_SPEEDUP:
+        raise SystemExit(
+            f"REGRESSION: fused iteration only {best:.2f}x over the "
+            f"composed-launch baseline (need >= {MIN_FUSED_SPEEDUP}x on "
+            f">= 1 matrix; per-matrix: "
+            + ", ".join(f"{k}={v:.2f}x" for k, v in speedups.items()) + ")")
+    if not res_f32.converged:
+        raise SystemExit(
+            f"REGRESSION: f32 {method} failed to reach {REFINE_TOL} on "
+            f"{name} (residual {float(res_f32.residual):.2e})")
+    if true_res > REFINE_TOL:
+        raise SystemExit(
+            f"REGRESSION: bf16-refined solve missed the f32 target: true "
+            f"residual {true_res:.2e} > {REFINE_TOL}")
+    if it_ref > MAX_REFINED_ITER_RATIO * max(it_f32, 1):
+        raise SystemExit(
+            f"REGRESSION: refinement needed {it_ref} inner iterations vs "
+            f"{it_f32} f32 iterations "
+            f"(> {MAX_REFINED_ITER_RATIO}x budget)")
+    print(f"# guards ok: fused {best:.2f}x >= {MIN_FUSED_SPEEDUP}x; "
+          f"refined {it_ref} vs f32 {it_f32} iters, true_res "
+          f"{true_res:.1e} <= {REFINE_TOL}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -15,6 +15,12 @@ memory term is therefore conservative and flagged as such.
 
 Usage: python -m benchmarks.roofline [--dir experiments/dryrun/single]
 writes experiments/roofline.md + .json and prints the CSV.
+
+``--solve-json BENCH_solve.json`` appends a solver-iteration section
+from ``benchmarks/bench_solve.py``'s artifact: each row's measured
+seconds per iteration against the roofline of its FULL per-iteration
+traffic (spMV streams plus carrier-vector passes — the bytes this
+harness used to omit when it priced an iteration as one spMVM).
 """
 from __future__ import annotations
 
@@ -62,10 +68,36 @@ def analyze(rec: dict) -> dict | None:
     )
 
 
+def solve_rows(path: str) -> list[dict]:
+    """Solver-iteration roofline rows from a BENCH_solve.json artifact.
+    ``bytes_per_iter`` in the artifact already includes the carrier
+    passes (``perf_model.solver_iteration_bytes``); the roofline here is
+    that traffic over the spec HBM bandwidth, and ``effective GB/s`` is
+    what the measured iteration actually streamed."""
+    with open(path) as f:
+        payload = json.load(f)
+    out = []
+    for r in payload["rows"]:
+        if "seconds_per_iter" not in r or "bytes_per_iter" not in r:
+            continue                      # convergence rows have no rate
+        t, by = r["seconds_per_iter"], r["bytes_per_iter"]
+        memory_s = by / PM.TPU_V5E.hbm_bw
+        out.append(dict(
+            name=r["name"], matrix=r["matrix"], method=r["method"],
+            strategy=r["strategy"], measured_s=t, bytes_per_iter=by,
+            memory_s=memory_s,
+            effective_gbs=by / t / 1e9 if t else 0.0,
+            roofline_fraction=memory_s / t if t else 0.0))
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun/single")
     ap.add_argument("--out", default="experiments/roofline")
+    ap.add_argument("--solve-json", default=None,
+                    help="BENCH_solve.json artifact to append a "
+                         "solver-iteration section from")
     args = ap.parse_args()
     cells = load_cells(args.dir)
     rows, skipped, errors = [], [], []
@@ -94,12 +126,25 @@ def main():
     for s in skipped:
         lines.append(f"| {s['arch']} | {s['shape']} | — | — | — | skipped: "
                      f"{s['reason']} | — | — | — |")
+    srows = solve_rows(args.solve_json) if args.solve_json else []
+    if srows:
+        lines += ["", "## Solver iterations (spMV + carrier traffic)", "",
+                  "| row | bytes/iter | measured us | roofline us "
+                  "| eff GB/s | frac |",
+                  "|" + "---|" * 6]
+        for r in srows:
+            lines.append(
+                f"| {r['name']} | {r['bytes_per_iter']:.3e} "
+                f"| {r['measured_s'] * 1e6:.1f} "
+                f"| {r['memory_s'] * 1e6:.1f} "
+                f"| {r['effective_gbs']:.2f} "
+                f"| {r['roofline_fraction']:.3f} |")
     md = "\n".join(lines)
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out + ".md", "w") as f:
         f.write(md + "\n")
     with open(args.out + ".json", "w") as f:
-        json.dump(rows, f, indent=1)
+        json.dump(rows + srows, f, indent=1)
     print(md)
     if errors:
         print(f"\n# {len(errors)} cells errored:")

@@ -2,7 +2,8 @@
 
 Spawns itself with 8 host devices, partitions a Poisson system row-wise
 with ``dist_operator`` — the SAME protocol object a single device uses —
-and runs CG with each of the paper's three communication modes, then
+and runs ``repro.solve`` CG with each of the paper's three
+communication modes, then
 Jacobi-preconditioned CG, block-CG (4 RHS per matrix stream), and
 BiCGStab on a non-symmetric perturbation (whose transpose partition
 backs ``op.T``).
@@ -20,8 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+import repro
 from repro.core import formats as F, matrices as M
-from repro.core import solvers as S
 from repro.core.operator import dist_operator
 from repro.launch.mesh import make_host_mesh
 
@@ -49,14 +50,16 @@ def main():
         # communication schedule changes
         op_m = dist_operator(op.dist, mesh, mode=mode)
         t0 = time.perf_counter()
-        res = S.cg(op_m, bj, maxiter=4000, tol=1e-6)
+        res = repro.solve(op_m, bj, method="cg", maxiter=4000,
+                          tol=1e-6)
         jax.block_until_ready(res.x)
         dt = time.perf_counter() - t0
         print(f"mode={mode:8s} iters={int(res.iters):4d} "
               f"rel_res={float(res.residual):.2e} wall={dt:.2f}s")
 
     # Jacobi-preconditioned CG: same solver source, M from op.diagonal()
-    res_j = S.cg(op, bj, maxiter=4000, tol=1e-6, M="jacobi")
+    res_j = repro.solve(op, bj, method="cg", precond="jacobi",
+                        maxiter=4000, tol=1e-6)
     print(f"jacobi-pcg    iters={int(res_j.iters):4d} "
           f"rel_res={float(res_j.residual):.2e}")
 
@@ -67,7 +70,8 @@ def main():
     bkj = jax.device_put(jnp.asarray(bk),
                          jax.NamedSharding(mesh, P("data", None)))
     t0 = time.perf_counter()
-    bres = S.block_cg(op, bkj, maxiter=4000, tol=1e-6)
+    bres = repro.solve(op, bkj, method="block_cg", maxiter=4000,
+                       tol=1e-6)
     jax.block_until_ready(bres.x)
     dt = time.perf_counter() - t0
     print(f"block-CG  k={k}   iters={int(bres.iters):4d} "
@@ -79,14 +83,15 @@ def main():
     # the transpose partition built by dist_operator also powers op_n.T
     mn = M.convection_poisson(96, 96, beta=0.5)
     op_n = dist_operator(mn, mesh, b_r=128)
-    nres = S.bicgstab(op_n, bj, maxiter=4000, tol=1e-8)
+    nres = repro.solve(op_n, bj, method="bicgstab", maxiter=4000,
+                       tol=1e-8)
     x = np.asarray(nres.x)[:m.n_rows]
     err = np.linalg.norm(F.csr_to_dense(mn) @ x - b[:m.n_rows]) \
         / np.linalg.norm(b[:m.n_rows])
     print(f"bicgstab (non-sym) iters={int(nres.iters):4d} true_res={err:.2e}")
 
     # verify CG against dense solve
-    res = S.cg(op, bj, maxiter=4000, tol=1e-8)
+    res = repro.solve(op, bj, method="cg", maxiter=4000, tol=1e-8)
     x = np.asarray(res.x)[:m.n_rows]
     err = np.linalg.norm(F.csr_to_dense(m) @ x - b[:m.n_rows]) \
         / np.linalg.norm(b[:m.n_rows])

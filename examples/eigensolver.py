@@ -6,12 +6,15 @@ of a sparse quantum Hamiltonian, where spMVM dominates the runtime.
 Since PR 3 the Krylov iteration runs against the SparseOperator
 protocol — ``operator(h)`` picks the storage format and keeps every
 permutation internal, so the solver sees the original basis end-to-end.
+The Ritz estimate is then polished with shift-inverted inverse
+iteration, whose inner SPD solves go through ``repro.solve``.
 
     PYTHONPATH=src python examples/eigensolver.py
 """
 import numpy as np
 import jax.numpy as jnp
 
+import repro
 from repro.core import formats as F, matrices as M, solvers as S
 from repro.core.operator import operator
 
@@ -36,11 +39,31 @@ def main():
     print(f"Lanczos Ritz extremes: lam_min~{ritz.min():.4f} "
           f"lam_max~{ritz.max():.4f}")
 
-    ref = np.linalg.eigvalsh(F.csr_to_dense(h))
+    # polish the extremal Ritz value with inverse iteration: for a shift
+    # sigma just above lam_max, (sigma*I - H) is SPD, so each inverse-
+    # iteration step is a CG solve through the repro.solve front door
+    sigma = float(ritz.max()) + 0.02
+    dh = F.csr_to_dense(h)
+    shifted = operator(
+        F.csr_from_dense((sigma * np.eye(h.n_rows, dtype=np.float32) - dh)))
+    # warm start: shifted power steps bias v toward the lam_max eigenvector
+    v = v0 / jnp.linalg.norm(v0)
+    for _ in range(20):
+        v = op @ v + 7.0 * v
+        v = v / jnp.linalg.norm(v)
+    for _ in range(3):
+        sol = repro.solve(shifted, v, method="cg", tol=1e-8, maxiter=4000)
+        v = sol.x / jnp.linalg.norm(sol.x)
+    lam = float(v @ (op @ v))            # Rayleigh quotient, original basis
+    print(f"inverse-iteration polish:  lam_max~{lam:.6f} "
+          f"(cg iters/step ~{int(sol.iters)})")
+
+    ref = np.linalg.eigvalsh(dh)
     print(f"dense reference:       lam_min={ref.min():.4f} "
           f"lam_max={ref.max():.4f}")
-    print(f"extremal eigenvalue error: "
-          f"{abs(ritz.max() - ref.max()):.2e}")
+    print(f"extremal eigenvalue error: Lanczos "
+          f"{abs(ritz.max() - ref.max()):.2e}, polished "
+          f"{abs(lam - ref.max()):.2e}")
 
 
 if __name__ == "__main__":

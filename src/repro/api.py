@@ -1,0 +1,300 @@
+"""``repro.solve`` — the one front door to every linear solve.
+
+The rest of the package is layered exactly like the paper's software
+stack: storage formats (``core.formats``), device kernels
+(``kernels``), the operator protocol (``core.operator``), Krylov
+methods (``core.solvers``), the autotuner (``tune``).  ``solve`` is the
+seam that composes them for the common case::
+
+    import repro
+    res = repro.solve(m, b)                      # host CSR, CG, tuned
+    res = repro.solve(op, b, method="bicgstab")  # existing operator
+    res.x, res.residual, res.iters, res.converged, res.info
+
+It owns the three decisions a caller would otherwise wire by hand:
+
+* STRATEGY — the fused spMV+dots iteration (``kernels.fused_iter`` +
+  ``solvers.fused_cg``/``fused_bicgstab``) whenever the operand
+  supports it (single-device SELL, resident RHS, square, no
+  preconditioner), the composed operator bodies otherwise (Dist
+  operators, block solves, preconditioned solves, bare closures);
+* TUNING — for host matrices, ``tune.tune_solver`` measures layout
+  candidates under the solver's own iteration (the config that wins
+  per ITERATION, not per matvec) and caches the winner under the
+  structural-fingerprint key;
+* PRECISION — ``refine`` wraps the solve in mixed-precision iterative
+  refinement (``solvers.iterative_refinement``): inner iterations
+  against a bf16(+int16) operand at 0.50x bytes/nnz, residual
+  corrections against the full-precision operator, final accuracy at
+  the f32 target.
+
+``refine="auto"`` turns refinement on exactly when a host matrix is
+requested with a sub-f32 ``dtype`` (the outer operator is then built at
+native f32 and the INNER one at the requested dtype); ``refine=True``
+forces it — for an existing f32 operator the inner operand is a bf16
+cast of it (Device and Dist operators both).  Refining a bare closure
+or a block solve raises (there is nothing to cast / no block
+refinement path).
+
+Every call returns :class:`repro.core.solvers.SolveResult`; ``info``
+carries ``strategy``, per-phase wall-clock ``phase_s`` (tune / build /
+solve), the tuner's decision under ``tune`` and per-round refinement
+diagnostics under ``refine``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import solvers as S
+from repro.core.solvers import SolveResult
+
+__all__ = ["solve"]
+
+_METHODS = ("cg", "bicgstab", "block_cg")
+_DEFAULT_MAXITER = {"cg": 500, "bicgstab": 1000, "block_cg": 500}
+
+
+def _is_host_matrix(a) -> bool:
+    from repro.core import formats as F
+    return isinstance(a, F.CSRMatrix)
+
+
+def _is_sub_f32(dtype) -> bool:
+    if dtype is None:
+        return False
+    dt = jnp.dtype(dtype)
+    return jnp.issubdtype(dt, jnp.floating) and dt.itemsize < 4
+
+
+def _fused_eligible(op, method: str, precond, b: jax.Array) -> bool:
+    """The fused iteration needs: a single-device SELL operand with the
+    resident-x grid (x_tiles == 1 — the fused epilogue runs once per
+    window), square, 1-D RHS, no preconditioner (the epilogue reduces
+    plain dots), and a cg/bicgstab recurrence."""
+    from repro.core.operator import DeviceOperator
+    return (method in ("cg", "bicgstab") and precond is None
+            and b.ndim == 1 and isinstance(op, DeviceOperator)
+            and op.fmt == "sell" and op.dev.x_tiles == 1
+            and op.shape[0] == op.shape[1])
+
+
+def _fused_dots_of(op):
+    """The fused-pass closure over ``op``'s SELL operand, cached on the
+    operator instance — it is the static jit key of the fused solvers,
+    so one closure per operand means one compile per operand."""
+    cached = getattr(op, "_fused_dots", None)
+    if cached is not None:
+        return cached
+    from repro.kernels import ops as K
+    from repro.kernels.fused_iter import make_matvec_dots
+    mvd = make_matvec_dots(op.dev.dev, backend=K.resolve_backend(op.backend))
+    try:
+        op._fused_dots = mvd
+    except (AttributeError, TypeError):
+        pass
+    return mvd
+
+
+def _cast_low_precision(op):
+    """A bf16 clone of an existing f32 operator for refinement's inner
+    solves: every floating leaf of the device/distributed operand drops
+    to bf16 (0.25x value bytes); a single-device SELL operand whose
+    column space fits additionally compresses ``col_idx`` to int16,
+    landing on the PR-4 0.50x bytes/nnz layout.  Structure-only fields
+    (index maps, permutations, halo tables) are untouched, so the clone
+    shares the original's partition/layout exactly."""
+    import dataclasses as _dc
+
+    from repro.core.operator import DeviceOperator, DistOperator
+
+    def _lo(leaf):
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf.astype(jnp.bfloat16)
+        return leaf
+
+    if isinstance(op, DeviceOperator):
+        dev = jax.tree_util.tree_map(_lo, op.dev)
+        inner = dev.dev
+        if (op.fmt == "sell" and hasattr(inner, "col_idx")
+                and op.shape[1] <= jnp.iinfo(jnp.int16).max):
+            inner = _dc.replace(inner,
+                                col_idx=inner.col_idx.astype(jnp.int16))
+            dev = _dc.replace(dev, dev=inner)
+        return DeviceOperator(dev, backend=op.backend)
+    if isinstance(op, DistOperator):
+        dist = jax.tree_util.tree_map(_lo, op.dist)
+        return DistOperator(dist, op.mesh, axis=op.axis, mode=op.mode,
+                            backend=op.backend, halo=op.halo,
+                            diag=op.diag)
+    raise ValueError(
+        "refine=True needs a Device/Dist operator (or a host matrix) to "
+        f"cast to bf16; got {type(op).__name__}")
+
+
+def _pad_to(v: jax.Array, n_pad: int) -> jax.Array:
+    return v if v.shape[0] == n_pad else jnp.pad(v, (0, n_pad - v.shape[0]))
+
+
+def _one_solve(op, b, *, method, strategy, maxiter, tol, precond,
+               x0=None) -> SolveResult:
+    if strategy == "fused":
+        mvd = _fused_dots_of(op)
+        n, n_pad = op.shape[0], op.dev.dev.n_rows_pad
+        bp = _pad_to(b, n_pad)
+        x0p = None if x0 is None else _pad_to(x0, n_pad)
+        fn = S.fused_cg if method == "cg" else S.fused_bicgstab
+        res = fn(mvd, bp, x0=x0p, maxiter=maxiter, tol=tol)
+        res.x = res.x[:n]
+        return res
+    if method == "cg":
+        return S.cg(op, b, x0=x0, maxiter=maxiter, tol=tol, M=precond)
+    if method == "bicgstab":
+        return S.bicgstab(op, b, x0=x0, maxiter=maxiter, tol=tol, M=precond)
+    return S.block_cg(op, b, x0=x0, maxiter=maxiter, tol=tol)
+
+
+def _refined_solve(op, op_lo, b, *, method, strategy, maxiter, tol,
+                   precond, x0=None) -> SolveResult:
+    """Mixed-precision refinement: inner ``method`` solves on the
+    low-precision operand, residual corrections on the full-precision
+    one.  The inner tolerance is floored at 1e-3 — bf16 storage cannot
+    resolve much further, and the outer loop closes the rest."""
+    apply_full = S._matvec_of(op)
+    inner_tol = max(tol, 1e-3)
+    inner_strategy = ("fused" if _fused_eligible(op_lo, method, precond, b)
+                      else "composed")
+
+    def residual_of(x):
+        return b - apply_full(x)
+
+    def inner(r):
+        rr = _one_solve(op_lo, r.astype(b.dtype), method=method,
+                        strategy=inner_strategy, maxiter=maxiter,
+                        tol=inner_tol, precond=precond)
+        return rr.x.astype(b.dtype), rr.iters, rr.residual
+
+    x, rn, rounds = S.iterative_refinement(residual_of, inner, b,
+                                           x0=x0, tol=tol)
+    total = sum(r["inner_iters"] for r in rounds)
+    res = S._result(method, x, total, rn, tol,
+                    strategy=f"{inner_strategy}+refined")
+    res.info["refine"] = {
+        "rounds": rounds,
+        "inner_dtype": str(op_lo.dtype),
+        "inner_tol": inner_tol,
+    }
+    return res
+
+
+def solve(a, b, *, method: str = "cg", precond=None, tol: float = 1e-6,
+          maxiter: int | None = None, x0=None, tune="auto",
+          refine="auto", format: str = "auto", dtype=None,
+          index_dtype="auto", backend="auto",
+          **convert_kwargs) -> SolveResult:
+    """Solve ``A x = b``; see the module docstring for the decisions
+    this front door makes.
+
+    ``a``: a host ``CSRMatrix`` (an operator is built — ``format`` /
+    ``dtype`` / ``index_dtype`` / ``backend`` and any further
+    ``as_device`` keywords apply, unless the tuner picks the layout), an
+    existing ``SparseOperator`` (used as-is), or a bare matvec closure
+    (composed strategy only).  ``method``: ``"cg"`` (SPD),
+    ``"bicgstab"`` (general), ``"block_cg"`` (SPD, b of shape (n, k)).
+    ``precond``: ``None``, ``"jacobi"`` or a callable ``z = M(r)``.
+    ``tune``: ``"auto"`` measures solver-level layout candidates for
+    host matrices (cached; ``"force"`` re-measures), ``"off"`` builds
+    the heuristic layout.  ``refine``: ``"auto"`` / ``True`` / ``False``
+    mixed-precision refinement, see module docstring.
+    """
+    if method not in _METHODS:
+        raise ValueError(f"method must be one of {_METHODS}; got {method!r}")
+    b = jnp.asarray(b)
+    if method == "block_cg" and b.ndim != 2:
+        raise ValueError(f"block_cg expects b of shape (n, k); got {b.shape}")
+    if method != "block_cg" and b.ndim != 1:
+        raise ValueError(f"{method} expects a 1-D b; got shape {b.shape}")
+    if refine is True and method == "block_cg":
+        raise ValueError("refine is not available for block_cg "
+                         "(no block refinement path)")
+    if refine is True and callable(precond):
+        raise ValueError("refine=True cannot re-derive a callable precond "
+                         "for the low-precision operand; use precond="
+                         "'jacobi' or None")
+    maxiter = _DEFAULT_MAXITER[method] if maxiter is None else maxiter
+    phase_s: dict = {}
+    info_tune = None
+    strategy_pref = None
+    op_lo = None
+
+    if _is_host_matrix(a):
+        m = a
+        do_refine = (refine is True
+                     or (refine == "auto" and _is_sub_f32(dtype)
+                         and method != "block_cg"))
+        inner_dtype = dtype if _is_sub_f32(dtype) else jnp.bfloat16
+        build_kwargs = dict(convert_kwargs)
+        t0 = time.perf_counter()
+        if tune not in ("off", False, None) and method != "block_cg":
+            from repro import tune as T
+            st = T.tune_solver(m, method=method,
+                               dtype=None if do_refine else dtype,
+                               index_dtype=index_dtype,
+                               force=(tune == "force"))
+            strategy_pref = st.strategy
+            build_kwargs = st.layout.build_kwargs()
+            info_tune = {"cached": st.cached, "strategy": st.strategy,
+                         "layout": st.layout.label()}
+        else:
+            build_kwargs.setdefault("format", format)
+            if (build_kwargs["format"] == "auto"
+                    and method in ("cg", "bicgstab") and precond is None):
+                build_kwargs["format"] = "sell"   # fused-eligible build
+        phase_s["tune"] = time.perf_counter() - t0
+
+        from repro.core.operator import operator
+        t0 = time.perf_counter()
+        op = operator(m, dtype=None if do_refine else dtype,
+                      index_dtype=index_dtype, backend=backend,
+                      **build_kwargs)
+        if do_refine:
+            op_lo = operator(m, dtype=inner_dtype, index_dtype=index_dtype,
+                             backend=backend, **build_kwargs)
+        phase_s["build"] = time.perf_counter() - t0
+    else:
+        op = a
+        is_operator = hasattr(op, "matvec")
+        do_refine = refine is True
+        if do_refine and not is_operator:
+            raise ValueError("refine=True needs an operator or host matrix; "
+                             "got a bare closure")
+        if do_refine and _is_sub_f32(getattr(op, "dtype", None)):
+            raise ValueError("refine=True expects a full-precision operator "
+                             "to refine against; this one is already "
+                             f"{op.dtype} — pass the host matrix instead")
+        t0 = time.perf_counter()
+        if do_refine:
+            op_lo = _cast_low_precision(op)
+        phase_s["build"] = time.perf_counter() - t0
+
+    strategy = ("fused"
+                if (_fused_eligible(op, method, precond, b)
+                    and strategy_pref != "composed")
+                else "composed")
+
+    t0 = time.perf_counter()
+    if do_refine:
+        res = _refined_solve(op, op_lo, b, method=method, strategy=strategy,
+                             maxiter=maxiter, tol=tol, precond=precond,
+                             x0=x0)
+    else:
+        res = _one_solve(op, b, method=method, strategy=strategy,
+                         maxiter=maxiter, tol=tol, precond=precond, x0=x0)
+    phase_s["solve"] = time.perf_counter() - t0
+
+    res.info["phase_s"] = phase_s
+    if info_tune is not None:
+        res.info["tune"] = info_tune
+    return res

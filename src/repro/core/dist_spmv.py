@@ -65,6 +65,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Literal
 
 import jax
@@ -523,6 +524,11 @@ def make_dist_matvec(dist: DistPJDS, mesh: Mesh, axis: str = "data",
         x-gradients.  ``backend="auto"`` resolves in
         ``kernels.ops.resolve_backend``.
     """
+    warnings.warn(
+        "make_dist_matvec is deprecated: use "
+        "core.operator.dist_operator(m, mesh) — the operator wraps this "
+        "closure and adds .T, diagonal() and gradients — or repro.solve "
+        "for whole systems", DeprecationWarning, stacklevel=2)
     return _make_dist_op(dist, mesh, axis, mode, backend, halo,
                          multi_rhs=False)
 
@@ -538,6 +544,10 @@ def make_dist_matmat(dist: DistPJDS, mesh: Mesh, axis: str = "data",
         Shim — see :func:`make_dist_matvec`; prefer
         ``core.operator.dist_operator(m, mesh).matmat``.
     """
+    warnings.warn(
+        "make_dist_matmat is deprecated: use "
+        "core.operator.dist_operator(m, mesh).matmat instead",
+        DeprecationWarning, stacklevel=2)
     return _make_dist_op(dist, mesh, axis, mode, backend, halo,
                          multi_rhs=True)
 
@@ -546,7 +556,8 @@ def dist_matvec(dist: DistPJDS, x: jax.Array, mesh: Mesh, axis: str = "data",
                 mode: Mode = "overlap",
                 backend: ops.Backend = "ref",
                 halo: Halo = "gathered") -> jax.Array:
-    return make_dist_matvec(dist, mesh, axis, mode, backend, halo)(x)
+    return _make_dist_op(dist, mesh, axis, mode, backend, halo,
+                         multi_rhs=False)(x)
 
 
 def dist_matmat(dist: DistPJDS, x: jax.Array, mesh: Mesh, axis: str = "data",
@@ -556,4 +567,5 @@ def dist_matmat(dist: DistPJDS, x: jax.Array, mesh: Mesh, axis: str = "data",
     if x.ndim != 2:
         raise ValueError(f"dist_matmat expects x of shape (n, k); got "
                          f"{x.shape}")
-    return make_dist_matmat(dist, mesh, axis, mode, backend, halo)(x)
+    return _make_dist_op(dist, mesh, axis, mode, backend, halo,
+                         multi_rhs=True)(x)

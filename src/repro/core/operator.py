@@ -375,9 +375,9 @@ class DistOperator(SparseOperator):
         key = (dist is self.t_dist, multi_rhs)
         fn = self._fwd_cache.get(key)
         if fn is None:
-            make = D.make_dist_matmat if multi_rhs else D.make_dist_matvec
-            fn = make(dist, self.mesh, self.axis, self.mode, self.backend,
-                      self.halo)
+            fn = D._make_dist_op(dist, self.mesh, self.axis, self.mode,
+                                 self.backend, self.halo,
+                                 multi_rhs=multi_rhs)
             self._fwd_cache[key] = fn
         return fn
 

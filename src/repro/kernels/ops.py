@@ -26,6 +26,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import hashlib
+import warnings
 import weakref
 from typing import Literal, Optional, Tuple, Union
 
@@ -763,6 +764,10 @@ def spmv(
     (``repro.tune``; ``"force"`` re-measures, bypassing the persistent
     cache).
     """
+    warnings.warn(
+        "kernels.ops.spmv is deprecated: build the operator once — "
+        "`operator(a) @ x` (repro.core.operator) — or call repro.solve "
+        "for whole systems", DeprecationWarning, stacklevel=2)
     from repro.core.operator import operator as _operator
     op = _operator(a, format=format, backend=backend, **convert_kwargs)
     return op @ jnp.asarray(x)

@@ -13,11 +13,11 @@ like any dense weight.
 :class:`SolveEngine` is the same serving idea applied to the paper's
 actual workload: many independent right-hand sides against ONE resident
 sparse matrix.  Requests queue up, get batched ``slots`` at a time into
-a multi-RHS block-CG solve (``core.solvers.block_cg`` over the
-operator's ``matmat``), so the matrix is streamed from memory once per
-iteration for the whole batch — the spMM amortisation the SELL-C-sigma
-follow-up identifies — and the SAME code serves a single-device
-operator or a mesh-distributed one (DESIGN.md §8).
+a multi-RHS block-CG solve (``repro.solve(..., method="block_cg")``
+over the operator's ``matmat``), so the matrix is streamed from memory
+once per iteration for the whole batch — the spMM amortisation the
+SELL-C-sigma follow-up identifies — and the SAME code serves a
+single-device operator or a mesh-distributed one (DESIGN.md §8).
 
 The decode path is the one the decode_32k / long_500k dry-run cells
 lower; here it runs for real on reduced configs (examples/serve_lm.py).
@@ -165,7 +165,6 @@ class SolveEngine:
 
     def __init__(self, op, *, slots: int = 4, maxiter: int = 2000,
                  tol: float = 1e-6, jacobi_precond: bool = False):
-        from repro.core import solvers as S
         if op.shape[0] != op.shape[1]:
             raise ValueError("SolveEngine serves square systems")
         self.op = op
@@ -185,22 +184,24 @@ class SolveEngine:
                                    1.0).astype(d.dtype)
             s = jnp.asarray(self._scale)[:, None]
             self._scaled_apply = lambda X: s * op.matmat(s * X)
-        self._solver = S.block_cg
 
     def _solve_batch(self, batch: List[SolveRequest]) -> None:
+        import repro
         n = self.op.shape[0]
         dt = np.dtype(self.op.dtype)
         bmat = np.zeros((n, self.slots), dtype=dt)
         for j, req in enumerate(batch):
             bmat[: len(req.b), j] = req.b
         if self._scale is None:
-            res = self._solver(self.op, jnp.asarray(bmat),
-                               maxiter=self.maxiter, tol=self.tol)
+            res = repro.solve(self.op, jnp.asarray(bmat),
+                              method="block_cg", maxiter=self.maxiter,
+                              tol=self.tol)
             x = np.asarray(res.x)
         else:
-            res = self._solver(self._scaled_apply,
-                               jnp.asarray(self._scale[:, None] * bmat),
-                               maxiter=self.maxiter, tol=self.tol)
+            res = repro.solve(self._scaled_apply,
+                              jnp.asarray(self._scale[:, None] * bmat),
+                              method="block_cg", maxiter=self.maxiter,
+                              tol=self.tol)
             x = np.asarray(self._scale[:, None] * np.asarray(res.x))
         if self._scale is None:
             rr = np.asarray(res.residual)

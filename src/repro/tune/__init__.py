@@ -15,13 +15,15 @@ Entry points most callers want are one level up —
 ``dist_operator(m, mesh, tune="auto")`` — which route here.
 """
 from .space import (Candidate, enumerate_candidates, heuristic_candidate,
-                    price_candidate, prune_candidates)
-from .measure import (measure_candidate, prepare_candidate, ab_compare,
+                    price_candidate, prune_candidates, solver_candidates)
+from .measure import (measure_candidate, measure_solver_candidate,
+                      prepare_candidate, ab_compare,
                       median_seconds, device_kind, measurement_backend)
 from .cache import TuneCache, default_cache, cache_key, dtype_policy
 from .calibrate import (fit_calibration, model_error,
                         rows_from_bench_kernels, fit_from_bench_kernels)
-from .autotune import TuneResult, TunePartition, autotune, tune_partition
+from .autotune import (TuneResult, TunePartition, SolverTuneResult,
+                       autotune, tune_partition, tune_solver)
 
 __all__ = [
     "Candidate",
@@ -43,8 +45,12 @@ __all__ = [
     "model_error",
     "rows_from_bench_kernels",
     "fit_from_bench_kernels",
+    "solver_candidates",
+    "measure_solver_candidate",
     "TuneResult",
     "TunePartition",
+    "SolverTuneResult",
     "autotune",
     "tune_partition",
+    "tune_solver",
 ]

@@ -27,9 +27,10 @@ from repro.kernels import ops
 from . import cache as C
 from . import measure as ME
 from .space import (Candidate, enumerate_candidates, heuristic_candidate,
-                    price_candidate, prune_candidates)
+                    price_candidate, prune_candidates, solver_candidates)
 
-__all__ = ["TuneResult", "TunePartition", "autotune", "tune_partition"]
+__all__ = ["TuneResult", "TunePartition", "SolverTuneResult",
+           "autotune", "tune_partition", "tune_solver"]
 
 _DEFAULT_TOP_K = 6
 
@@ -127,6 +128,80 @@ def autotune(
             best = heur
     cache.put(key, {"best": best.as_dict(), "rows": rows})
     return TuneResult(best=best, rows=rows, cached=False, key=key)
+
+
+# --------------------------------------------------------------------------
+# Solver-level tuning
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class SolverTuneResult:
+    """Outcome of one :func:`tune_solver` call: the iteration STRATEGY
+    (``"fused"`` / ``"composed"``) and the layout to build it on, plus
+    one row per measured (strategy, layout) probe."""
+
+    strategy: str
+    layout: Candidate
+    rows: list
+    cached: bool
+    key: str
+
+
+def tune_solver(
+    m: F.CSRMatrix,
+    *,
+    method: str = "cg",
+    dtype=None,
+    index_dtype="auto",
+    probe_iters: int = 20,
+    warmup: int = 1,
+    iters: int = 3,
+    cache: Optional[C.TuneCache] = None,
+    force: bool = False,
+    measure_fn: Optional[Callable] = None,
+) -> SolverTuneResult:
+    """Pick the measured-best (strategy, layout) for running ``method``
+    on ``m`` — the config that wins per solver ITERATION, not per
+    matvec: the fused spMV+dots pass amortizes differently than a bare
+    matvec (no separate reduction passes, but an extra weight-slab read
+    per window), so the per-matvec winner is not automatically the
+    per-iteration winner.
+
+    Same cache discipline as :func:`autotune` (persistent, keyed on the
+    structural fingerprint + device kind + dtype policy, with the
+    method as the ``extra`` component so cg and bicgstab tune
+    independently); ``measure_fn`` (signature of
+    ``measure.measure_solver_candidate``) exists for tests."""
+    if cache is None:
+        cache = C.default_cache()
+    key = C.cache_key(F.structural_fingerprint(m), ME.device_kind(),
+                      C.dtype_policy(dtype, index_dtype),
+                      extra=f"solver:method={method}")
+    if not force:
+        hit = cache.get(key)
+        if hit is not None:
+            return SolverTuneResult(
+                strategy=str(hit["strategy"]),
+                layout=Candidate.from_dict(hit["layout"]),
+                rows=list(hit.get("rows", [])), cached=True, key=key)
+
+    if measure_fn is None:
+        measure_fn = ME.measure_solver_candidate
+    cands = solver_candidates(m, method=method, dtype=dtype,
+                              index_dtype=index_dtype)
+    rows = []
+    for strategy, c in cands:
+        t = measure_fn(m, strategy, c, method=method, dtype=dtype,
+                       index_dtype=index_dtype, probe_iters=probe_iters,
+                       warmup=warmup, iters=iters)
+        rows.append({"strategy": strategy, "layout": c.as_dict(),
+                     "label": f"{strategy}: {c.label()}",
+                     "seconds_per_iter": float(t)})
+    best = rows[int(np.argmin([r["seconds_per_iter"] for r in rows]))]
+    cache.put(key, {"strategy": best["strategy"], "layout": best["layout"],
+                    "rows": rows})
+    return SolverTuneResult(strategy=best["strategy"],
+                            layout=Candidate.from_dict(best["layout"]),
+                            rows=rows, cached=False, key=key)
 
 
 # --------------------------------------------------------------------------

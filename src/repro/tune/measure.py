@@ -33,6 +33,7 @@ __all__ = [
     "device_kind",
     "prepare_candidate",
     "measure_candidate",
+    "measure_solver_candidate",
     "ab_compare",
 ]
 
@@ -99,6 +100,44 @@ def measure_candidate(
     return median_seconds(prepare_candidate(m, c, dtype=dtype,
                                             index_dtype=index_dtype),
                           warmup=warmup, iters=iters)
+
+
+def measure_solver_candidate(
+    m: F.CSRMatrix,
+    strategy: str,
+    c: Candidate,
+    *,
+    method: str = "cg",
+    dtype=None,
+    index_dtype="auto",
+    probe_iters: int = 20,
+    warmup: int = 1,
+    iters: int = 3,
+) -> float:
+    """Median seconds PER SOLVER ITERATION of ``(strategy, c)``: a
+    fixed-length probe solve (``maxiter=probe_iters, tol=0`` — no early
+    exit, so every probe runs the same iteration count) divided by
+    ``probe_iters``.  This times what :func:`median_seconds` over a bare
+    matvec cannot: the fused epilogue's dot reductions vs the composed
+    body's separate passes, under the method's real carrier traffic.
+    Returns ``inf`` when the strategy cannot run this layout (fused
+    needs a resident-x SELL build)."""
+    from repro import api                     # deferred: api imports tune
+    from repro.core.operator import operator
+
+    op = operator(m, dtype=dtype, index_dtype=index_dtype,
+                  **c.build_kwargs())
+    rng = np.random.default_rng(MEASURE_SEED)
+    b = jnp.asarray(rng.standard_normal(m.shape[0]).astype(np.float32))
+    if strategy == "fused" and not api._fused_eligible(op, method, None, b):
+        return float("inf")
+
+    def probe():
+        r = api._one_solve(op, b, method=method, strategy=strategy,
+                           maxiter=probe_iters, tol=0.0, precond=None)
+        return r.x
+
+    return median_seconds(probe, warmup=warmup, iters=iters) / probe_iters
 
 
 def ab_compare(

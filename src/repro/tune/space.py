@@ -37,6 +37,7 @@ __all__ = [
     "enumerate_candidates",
     "price_candidate",
     "prune_candidates",
+    "solver_candidates",
 ]
 
 # Default search axes.  Deliberately small: the point of the model-based
@@ -183,6 +184,40 @@ def enumerate_candidates(
                         out.append(Candidate(fmt=fmt, b_r=b_r,
                                              chunk_l=chunk_l, sigma=sigma,
                                              x_tiles=xt))
+    return list(dict.fromkeys(out))
+
+
+def solver_candidates(
+    m: F.CSRMatrix,
+    *,
+    method: str = "cg",
+    dtype=None,
+    index_dtype="auto",
+) -> list[tuple[str, Candidate]]:
+    """The SOLVER-level probe set: (strategy, layout) pairs for
+    ``tune_solver``, where strategy is ``"fused"`` (the fused
+    spMV+dots iteration — needs a resident-x SELL build, so those
+    candidates pin ``x_tiles=1``) or ``"composed"`` (separate
+    matvec + reduction HLOs over whatever layout wins per matvec).
+
+    Deliberately tiny — a handful of probes, each a fixed-iteration
+    solve, because the per-matvec tuner (:func:`enumerate_candidates` +
+    prune) already explored the layout space; here only the decisions
+    that CHANGE at the solver level are measured: fused vs composed,
+    and the fused path's tile height (the epilogue's dot reductions
+    shift the best chunk_l relative to a bare matvec).
+    """
+    h_sell = heuristic_candidate(m, "sell", dtype, index_dtype)
+    h_sell = dataclasses.replace(h_sell, x_tiles=1)
+    alt_cl = 8 if h_sell.chunk_l != 8 else 16
+    h_auto = heuristic_candidate(m, "auto", dtype, index_dtype)
+    out: list[tuple[str, Candidate]] = [
+        ("fused", h_sell),
+        ("fused", dataclasses.replace(h_sell, chunk_l=alt_cl)),
+        ("composed", h_auto),
+    ]
+    if h_auto != h_sell:
+        out.append(("composed", h_sell))
     return list(dict.fromkeys(out))
 
 

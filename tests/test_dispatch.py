@@ -1,4 +1,4 @@
-"""Unified dispatch layer: spmv(a, x, format="auto") property tests.
+"""Unified dispatch layer: operator(a, format="auto") @ x property tests.
 
 Three structurally different sparsity patterns (banded, power-law,
 uniform-random) must all produce the dense-reference answer through the
@@ -12,6 +12,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import formats as F
+from repro.core.operator import operator
 from repro.kernels import ops
 
 B_R = 32
@@ -44,7 +45,7 @@ def _check_auto(a):
     m = F.csr_from_dense(a)
     rng = np.random.default_rng(1)
     x = rng.standard_normal(a.shape[1]).astype(np.float32)
-    y = np.asarray(ops.spmv(m, x, format="auto", b_r=B_R))
+    y = np.asarray(operator(m, format="auto", b_r=B_R) @ x)
     truth = a.astype(np.float64) @ x
     scale = max(np.abs(truth).max(), 1.0)
     np.testing.assert_allclose(y / scale, truth / scale, atol=1e-5)
@@ -77,7 +78,7 @@ def test_explicit_formats_agree(rng, fmt):
     m = F.csr_from_dense(a)
     x = rng.standard_normal(160).astype(np.float32)
     truth = a.astype(np.float64) @ x
-    y = np.asarray(ops.spmv(m, x, format=fmt, b_r=B_R))
+    y = np.asarray(operator(m, format=fmt, b_r=B_R) @ x)
     scale = max(np.abs(truth).max(), 1.0)
     np.testing.assert_allclose(y / scale, truth / scale, atol=1e-5)
 
@@ -87,9 +88,9 @@ def test_kernel_backend_through_dispatch(rng):
     m = F.csr_from_dense(a)
     x = rng.standard_normal(128).astype(np.float32)
     for fmt in ("ellpack_r", "pjds", "sell"):
-        y_r = np.asarray(ops.spmv(m, x, format=fmt, b_r=B_R, backend="ref"))
-        y_k = np.asarray(ops.spmv(m, x, format=fmt, b_r=B_R,
-                                  backend="kernel"))
+        y_r = np.asarray(operator(m, format=fmt, b_r=B_R, backend="ref") @ x)
+        y_k = np.asarray(operator(m, format=fmt, b_r=B_R,
+                                   backend="kernel") @ x)
         np.testing.assert_allclose(y_k, y_r, atol=1e-4, rtol=1e-4)
 
 
@@ -101,9 +102,9 @@ def test_conversion_cache_reuses_device_rep(rng):
     # different build params -> different entry (8 was the old default)
     d3 = ops.as_device(m, "auto", b_r=B_R, chunk_l=8)
     assert d3 is not d1
-    # spmv goes through the same cache
+    # operator application goes through the same cache
     x = rng.standard_normal(96).astype(np.float32)
-    ops.spmv(m, x, b_r=B_R)
+    operator(m, b_r=B_R) @ x
     assert ops.as_device(m, "auto", b_r=B_R) is d1
 
 
@@ -119,9 +120,9 @@ def test_dense_input_hits_conversion_cache(rng):
     b = a.copy()
     b[0, 0] += 1.0
     assert ops.as_device(b, "auto", b_r=B_R) is not d1
-    # spmv over dense input rides the same cache
+    # operator application over dense input rides the same cache
     x = rng.standard_normal(96).astype(np.float32)
-    ops.spmv(a.copy(), x, b_r=B_R)
+    operator(a.copy(), b_r=B_R) @ x
     assert ops.as_device(a, "auto", b_r=B_R) is d1
 
 
@@ -131,7 +132,7 @@ def test_tiny_and_empty_fall_back_to_csr(rng):
     empty = F.csr_from_dense(np.zeros((256, 256), np.float32))
     assert ops.select_format(empty, b_r=B_R) == "csr"
     x = np.ones(256, np.float32)
-    assert np.all(np.asarray(ops.spmv(empty, x, b_r=B_R)) == 0)
+    assert np.all(np.asarray(operator(empty, b_r=B_R) @ x) == 0)
 
 
 def test_non_square_dispatch(rng):
@@ -141,7 +142,7 @@ def test_non_square_dispatch(rng):
     x = rng.standard_normal(200).astype(np.float32)
     truth = a.astype(np.float64) @ x
     for fmt in ("auto", "csr", "ellpack_r", "pjds", "sell"):
-        y = np.asarray(ops.spmv(m, x, format=fmt, b_r=B_R))
+        y = np.asarray(operator(m, format=fmt, b_r=B_R) @ x)
         assert y.shape == (96,)
         np.testing.assert_allclose(y, truth, atol=1e-4)
 
@@ -167,3 +168,29 @@ def test_storage_estimates_match_built_matrices(seed, fmt):
         built = F.storage_elements(F.csr_to_sell(m, c=B_R, sigma=2 * B_R,
                                                  permuted_cols=False))
     assert est == built
+
+
+# --------------------------------------------------------------------------
+# Deprecated pre-protocol shims
+# --------------------------------------------------------------------------
+def test_spmv_shim_warns_and_still_works(rng):
+    """ops.spmv is a deprecated shim over the operator API: it must warn
+    (pointing at operator / repro.solve) and keep computing correctly."""
+    a = _uniform(rng, 120, density=0.08)
+    m = F.csr_from_dense(a)
+    x = rng.standard_normal(120).astype(np.float32)
+    with pytest.warns(DeprecationWarning, match="operator"):
+        y = np.asarray(ops.spmv(m, jnp.asarray(x)))
+    np.testing.assert_allclose(y, a.astype(np.float64) @ x, atol=1e-4)
+
+
+def test_operator_path_does_not_warn(rng):
+    """The replacement API must be warning-free — otherwise every
+    migrated caller would still see deprecation noise."""
+    import warnings
+    a = _uniform(rng, 96, density=0.1)
+    m = F.csr_from_dense(a)
+    x = jnp.asarray(rng.standard_normal(96).astype(np.float32))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        np.asarray(operator(m) @ x)

@@ -130,8 +130,9 @@ _SCRIPT = textwrap.dedent("""
     import json
     import numpy as np, jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
+    import repro
     from repro.core import formats as F, matrices as M, dist_spmv as D
-    from repro.core import solvers as S
+    from repro.core.operator import dist_operator
     from repro.launch.mesh import make_host_mesh
 
     out = {}
@@ -178,13 +179,13 @@ _SCRIPT = textwrap.dedent("""
             T = dense @ X[:m.n_rows]
             scale = np.abs(T).max()
             for mode in ("vector", "naive", "overlap"):
-                mm = jax.jit(D.make_dist_matmat(dist, mesh, "data", mode))
+                mm = jax.jit(dist_operator(dist, mesh, mode=mode).matmat)
                 Y = np.asarray(mm(Xj))[:m.n_rows]
                 out[f"err_{name}_k{k}_{mode}"] = float(
                     np.abs(Y - T).max() / scale)
             # gathered and full-slice halos agree
-            mm_full = jax.jit(D.make_dist_matmat(dist, mesh, "data",
-                                                 "overlap", halo="full"))
+            mm_full = jax.jit(dist_operator(dist, mesh, mode="overlap",
+                                            halo="full").matmat)
             Yf = np.asarray(mm_full(Xj))[:m.n_rows]
             out[f"err_{name}_k{k}_full"] = float(np.abs(Yf - T).max() / scale)
 
@@ -197,18 +198,17 @@ _SCRIPT = textwrap.dedent("""
     B[:m.n_rows] = rng.standard_normal((m.n_rows, k))
     Bj = jax.device_put(jnp.asarray(B),
                         jax.NamedSharding(mesh, P("data", None)))
-    mm = D.make_dist_matmat(dist, mesh, "data", "overlap")
-    res = S.block_cg(mm, Bj, maxiter=1500, tol=1e-6)
+    op = dist_operator(dist, mesh, mode="overlap")
+    res = repro.solve(op, Bj, method="block_cg", maxiter=1500, tol=1e-6)
     out["blk_cg_res"] = float(np.max(np.asarray(res.residual)))
     out["blk_cg_iters"] = int(res.iters)
     Xblk = np.asarray(res.x)[:m.n_rows]
 
-    mv = D.make_dist_matvec(dist, mesh, "data", "overlap")
     cg_res, Xcols = [], []
     for j in range(k):
         bj = jax.device_put(jnp.asarray(B[:, j]),
                             jax.NamedSharding(mesh, P("data")))
-        r = S.cg(mv, bj, maxiter=1500, tol=1e-6)
+        r = repro.solve(op, bj, method="cg", maxiter=1500, tol=1e-6)
         cg_res.append(float(r.residual))
         Xcols.append(np.asarray(r.x)[:m.n_rows])
     out["cg_res_max"] = max(cg_res)
@@ -257,3 +257,19 @@ def test_distributed_block_cg_matches_independent_cg(spmm_results):
     assert spmm_results["cg_res_max"] < 1e-5
     assert spmm_results["x_diff"] < 1e-3
     assert 0 < spmm_results["blk_cg_iters"] < 1500
+
+
+# --------------------------------------------------------------------------
+# Deprecated closure factories (host-side: building warns, no launch)
+# --------------------------------------------------------------------------
+def test_make_dist_closures_warn():
+    """make_dist_matvec/make_dist_matmat are deprecated shims over
+    dist_operator — both must raise DeprecationWarning at build time."""
+    from repro.launch.mesh import make_host_mesh
+    m = M.poisson_2d(8, 8)
+    dist = D.partition_csr(m, 1, b_r=32)
+    mesh = make_host_mesh(1)
+    with pytest.warns(DeprecationWarning, match="dist_operator"):
+        D.make_dist_matvec(dist, mesh)
+    with pytest.warns(DeprecationWarning, match="dist_operator"):
+        D.make_dist_matmat(dist, mesh)

@@ -17,7 +17,9 @@ _SCRIPT = textwrap.dedent("""
     import json, re
     import numpy as np, jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
+    import repro
     from repro.core import formats as F, matrices as M, dist_spmv as D
+    from repro.core.operator import dist_operator
     from repro.launch.mesh import make_host_mesh
 
     out = {}
@@ -34,15 +36,14 @@ _SCRIPT = textwrap.dedent("""
     truth = F.csr_to_dense(m).astype(np.float64) @ x[:m.n_rows]
     scale = np.abs(truth).max()
     for mode in ("vector", "naive", "overlap"):
-        mv = jax.jit(D.make_dist_matvec(dist, mesh, "data", mode))
+        op = dist_operator(dist, mesh, mode=mode)
+        mv = jax.jit(op.matvec)
         y = np.asarray(mv(xj))[:m.n_rows]
         out[f"err_{mode}"] = float(np.abs(y - truth).max() / scale)
-        hlo = jax.jit(D.make_dist_matvec(dist, mesh, "data", mode)
-                      ).lower(xj).compile().as_text()
+        hlo = mv.lower(xj).compile().as_text()
         out[f"cp_{mode}"] = len(re.findall(r"collective-permute", hlo))
-        mv_full = jax.jit(D.make_dist_matvec(dist, mesh, "data", mode,
-                                             halo="full"))
-        yf = np.asarray(mv_full(xj))[:m.n_rows]
+        op_full = dist_operator(dist, mesh, mode=mode, halo="full")
+        yf = np.asarray(jax.jit(op_full.matvec)(xj))[:m.n_rows]
         out[f"err_full_{mode}"] = float(np.abs(yf - truth).max() / scale)
     out["comm_gathered"] = dist.comm_bytes_per_device(4)
     out["comm_full"] = dist.comm_bytes_per_device(4, halo="full")
@@ -56,18 +57,17 @@ _SCRIPT = textwrap.dedent("""
     x2 = np.zeros(dist2.n_global_pad, np.float32)
     x2[:320] = rng.standard_normal(320)
     xj2 = jax.device_put(jnp.asarray(x2), jax.NamedSharding(mesh, P("data")))
-    y2 = np.asarray(jax.jit(D.make_dist_matvec(dist2, mesh, "data",
-                                               "overlap"))(xj2))[:320]
+    y2 = np.asarray(jax.jit(dist_operator(dist2, mesh,
+                                          mode="overlap").matvec)(xj2))[:320]
     t2 = a.astype(np.float64) @ x2[:320]
     out["err_wide"] = float(np.abs(y2 - t2).max() / np.abs(t2).max())
 
-    # distributed CG on the Poisson system
-    from repro.core import solvers as S
+    # distributed CG on the Poisson system, through the repro.solve door
     b = np.zeros(dist.n_global_pad, np.float32)
     b[:m.n_rows] = rng.standard_normal(m.n_rows)
     bj = jax.device_put(jnp.asarray(b), jax.NamedSharding(mesh, P("data")))
-    mv = D.make_dist_matvec(dist, mesh, "data", "overlap")
-    res = S.cg(mv, bj, maxiter=2000, tol=1e-6)
+    res = repro.solve(dist_operator(dist, mesh, mode="overlap"), bj,
+                      method="cg", maxiter=2000, tol=1e-6)
     out["cg_res"] = float(res.residual)
     out["cg_iters"] = int(res.iters)
     print(json.dumps(out))

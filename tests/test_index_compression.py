@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import formats as F
+from repro.core.operator import operator
 from repro.kernels import ops
 
 
@@ -57,9 +58,10 @@ def test_int16_matches_int32_and_dense(rng, n, fmt):
     a, m = _mk(rng, n)
     x = rng.standard_normal(n).astype(np.float32)
     truth = a.astype(np.float64) @ x
-    y16 = np.asarray(ops.spmv(m, x, format=fmt, b_r=32, backend="kernel"))
-    y32 = np.asarray(ops.spmv(m, x, format=fmt, b_r=32, backend="kernel",
-                              index_dtype=np.int32))
+    y16 = np.asarray(operator(m, format=fmt, b_r=32,
+                              backend="kernel") @ x)
+    y32 = np.asarray(operator(m, format=fmt, b_r=32, backend="kernel",
+                              index_dtype=np.int32) @ x)
     d16 = ops.as_device(m, fmt, b_r=32)
     assert d16.index_dtype == np.int16        # n << 2**15: auto compresses
     assert ops.as_device(m, fmt, b_r=32,
@@ -128,10 +130,10 @@ def test_padding_audit_catches_corruption(rng):
 def test_x_tiled_kernel_matches_resident(rng, fmt, x_tiles):
     a, m = _mk(rng, 128, density=0.1)
     x = rng.standard_normal(128).astype(np.float32)
-    y_res = np.asarray(ops.spmv(m, x, format=fmt, b_r=32, backend="kernel",
-                                x_tiles=1))
-    y_tiled = np.asarray(ops.spmv(m, x, format=fmt, b_r=32,
-                                  backend="kernel", x_tiles=x_tiles))
+    y_res = np.asarray(operator(m, format=fmt, b_r=32, backend="kernel",
+                                x_tiles=1) @ x)
+    y_tiled = np.asarray(operator(m, format=fmt, b_r=32,
+                                  backend="kernel", x_tiles=x_tiles) @ x)
     np.testing.assert_allclose(y_tiled, y_res, atol=1e-5, rtol=1e-5)
     np.testing.assert_allclose(y_tiled, a.astype(np.float64) @ x, atol=1e-3)
 
@@ -142,8 +144,8 @@ def test_x_tiles_pad_when_not_divisible(rng):
     a, m = _mk(rng, 130, density=0.1)
     x = rng.standard_normal(130).astype(np.float32)
     for fmt in ("pjds", "sell"):
-        y = np.asarray(ops.spmv(m, x, format=fmt, b_r=32, backend="kernel",
-                                x_tiles=4))
+        y = np.asarray(operator(m, format=fmt, b_r=32, backend="kernel",
+                                x_tiles=4) @ x)
         np.testing.assert_allclose(y, a.astype(np.float64) @ x, atol=1e-3)
 
 

@@ -112,3 +112,176 @@ def test_hmep_hamiltonian_lanczos(rng):
     ev = S.tridiag_eigvals(al, be)
     dense_ev = np.linalg.eigvalsh(d)
     assert abs(ev.max() - dense_ev.max()) < 5e-3 * max(abs(dense_ev).max(), 1)
+
+# --------------------------------------------------------------------------
+# repro.solve front door: fused/composed parity, refinement, the result
+# contract, and the distributed leg of the parity grid
+# --------------------------------------------------------------------------
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+import repro
+from repro import api
+from repro.core.operator import operator
+
+# 17x19 grids: 323 rows, not divisible by any tile height — both the
+# fused kernel's slab epilogue and the composed path must mask the ragged
+# tail identically
+_PARITY_CASES = [
+    ("cg", lambda: M.poisson_2d(17, 19)),
+    ("bicgstab", lambda: M.convection_poisson(17, 19, beta=0.4)),
+]
+
+
+def _true_residual(m, x, b):
+    d = F.csr_to_dense(m).astype(np.float64)
+    return float(np.linalg.norm(d @ np.asarray(x, np.float64) - b)
+                 / np.linalg.norm(b))
+
+
+@pytest.mark.parametrize("method,mk", _PARITY_CASES,
+                         ids=[c[0] for c in _PARITY_CASES])
+def test_fused_composed_parity_device(method, mk, rng):
+    """The fused spMV+dots iteration and the composed operator body are
+    the same algorithm: same convergence, same solution."""
+    m = mk()
+    b = rng.standard_normal(m.n_rows).astype(np.float32)
+    bj = jnp.asarray(b)
+    op = operator(m, format="sell", x_tiles=1)
+    fused = api._one_solve(op, bj, method=method, strategy="fused",
+                           maxiter=3000, tol=1e-7, precond=None)
+    comp = api._one_solve(op, bj, method=method, strategy="composed",
+                          maxiter=3000, tol=1e-7, precond=None)
+    assert fused.info["strategy"] == "fused"
+    assert comp.info["strategy"] == "composed"
+    assert _true_residual(m, fused.x, b) < 1e-5
+    assert _true_residual(m, comp.x, b) < 1e-5
+    scale = max(np.abs(np.asarray(comp.x)).max(), 1e-30)
+    assert np.abs(np.asarray(fused.x) - np.asarray(comp.x)).max() \
+        / scale < 1e-4
+
+
+@pytest.mark.parametrize("method,mk", _PARITY_CASES,
+                         ids=[c[0] for c in _PARITY_CASES])
+def test_refined_bf16_matches_f32_device(method, mk, rng):
+    """bf16 inner iterations + f32 residual correction land on the same
+    answer as the all-f32 solve, at the same tolerance."""
+    m = mk()
+    b = rng.standard_normal(m.n_rows).astype(np.float32)
+    bj = jnp.asarray(b)
+    r32 = repro.solve(m, bj, method=method, tol=1e-6, maxiter=3000,
+                      tune="off", refine=False)
+    rref = repro.solve(m, bj, method=method, tol=1e-6, maxiter=3000,
+                       tune="off", dtype=jnp.bfloat16, refine="auto")
+    assert bool(r32.converged) and bool(rref.converged)
+    assert _true_residual(m, r32.x, b) < 1e-5
+    assert _true_residual(m, rref.x, b) < 1e-5
+    rounds = rref.info["refine"]["rounds"]
+    assert len(rounds) >= 1
+    assert rref.info["refine"]["inner_dtype"] == "bfloat16"
+
+
+def test_solve_result_contract(rng):
+    """Every method returns the SAME result type with the same fields
+    populated — the point of collapsing the per-solver NamedTuples."""
+    m = M.poisson_2d(12, 14)                 # 168 rows, also non-divisible
+    b1 = jnp.asarray(rng.standard_normal(m.n_rows).astype(np.float32))
+    bk = jnp.asarray(rng.standard_normal((m.n_rows, 3)).astype(np.float32))
+    for method, rhs in (("cg", b1), ("bicgstab", b1), ("block_cg", bk)):
+        res = repro.solve(m, rhs, method=method, tol=1e-6, maxiter=2000,
+                          tune="off", refine=False)
+        assert isinstance(res, S.SolveResult)
+        assert res.method == method
+        assert res.x.shape == rhs.shape
+        # residual: scalar for 1-D solves (possibly a certified host
+        # float from the fused driver), per-column (k,) for block_cg
+        assert np.shape(res.residual) == (() if rhs.ndim == 1 else (3,))
+        assert bool(res.converged)
+        assert 0 < int(res.iters) <= 2000
+        assert res.info["strategy"] in ("fused", "composed")
+        assert {"tune", "build", "solve"} <= set(res.info["phase_s"])
+
+
+def test_solve_rejects_bad_arguments(rng):
+    m = M.poisson_2d(8, 8)
+    b = jnp.asarray(rng.standard_normal(m.n_rows).astype(np.float32))
+    with pytest.raises(ValueError, match="method"):
+        repro.solve(m, b, method="gmres")
+    with pytest.raises(ValueError, match="shape"):
+        repro.solve(m, b, method="block_cg")
+    with pytest.raises(ValueError, match="refine"):
+        repro.solve(m, jnp.stack([b, b], axis=1), method="block_cg",
+                    refine=True)
+    with pytest.raises(ValueError, match="closure"):
+        op = operator(m)
+        repro.solve(op.matvec, b, refine=True)
+
+
+_DIST_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    import repro
+    from repro.core import formats as F, matrices as M, dist_spmv as D
+    from repro.core.operator import dist_operator
+    from repro.launch.mesh import make_host_mesh
+
+    out = {}
+    mesh = make_host_mesh(8)
+    rng = np.random.default_rng(0)
+    cases = [("cg", M.poisson_2d(17, 19)),
+             ("bicgstab", M.convection_poisson(17, 19, beta=0.4))]
+    for method, m in cases:
+        dist = D.partition_csr(m, 8, b_r=32)
+        b = np.zeros(dist.n_global_pad, np.float32)
+        b[:m.n_rows] = rng.standard_normal(m.n_rows)
+        bj = jax.device_put(jnp.asarray(b),
+                            jax.NamedSharding(mesh, P("data")))
+        op = dist_operator(dist, mesh, mode="overlap")
+        dense = F.csr_to_dense(m).astype(np.float64)
+        bn = np.linalg.norm(b[:m.n_rows])
+        res = repro.solve(op, bj, method=method, maxiter=4000, tol=1e-6)
+        x = np.asarray(res.x, np.float64)[:m.n_rows]
+        out[f"{method}_true"] = float(
+            np.linalg.norm(dense @ x - b[:m.n_rows]) / bn)
+        out[f"{method}_strategy"] = res.info["strategy"]
+        resr = repro.solve(op, bj, method=method, maxiter=4000, tol=1e-6,
+                           refine=True)
+        xr = np.asarray(resr.x, np.float64)[:m.n_rows]
+        out[f"{method}_true_refined"] = float(
+            np.linalg.norm(dense @ xr - b[:m.n_rows]) / bn)
+        out[f"{method}_rounds"] = len(resr.info["refine"]["rounds"])
+    print(json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def dist_solve_results():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _DIST_SCRIPT],
+                       capture_output=True, text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stderr[-3000:]
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.dist
+@pytest.mark.parametrize("method", ["cg", "bicgstab"])
+def test_solve_distributed_parity(dist_solve_results, method):
+    """The Dist column of the parity grid: repro.solve over the mesh
+    operator (composed strategy — fused is single-device) reaches the
+    f32 tolerance, plain and bf16-refined."""
+    out = dist_solve_results
+    assert out[f"{method}_strategy"] == "composed"
+    assert out[f"{method}_true"] < 1e-5
+    assert out[f"{method}_true_refined"] < 1e-5
+    assert out[f"{method}_rounds"] >= 1

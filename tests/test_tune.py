@@ -218,7 +218,8 @@ def test_as_device_tune_auto_builds_tuned_statics(cache, monkeypatch):
         assert d.b_r == res.best.b_r and d.chunk_l == res.best.chunk_l
     x = np.random.default_rng(1).standard_normal(m.shape[1]).astype(np.float32)
     truth = a.astype(np.float64) @ x
-    y = np.asarray(ops.spmv(m, jnp.asarray(x), tune="auto"), np.float64)
+    from repro.core.operator import operator
+    y = np.asarray(operator(m, tune="auto") @ jnp.asarray(x), np.float64)
     scale = max(np.abs(truth).max(), 1.0)
     np.testing.assert_allclose(y / scale, truth / scale, atol=1e-5)
 
@@ -271,3 +272,52 @@ def test_partition_rem_chunk_l_matches_shared_build():
                                   np.asarray(d_tuned.rem_val))
     np.testing.assert_array_equal(np.asarray(d_shared.rem_chunk_map),
                                   np.asarray(d_tuned.rem_chunk_map))
+
+
+# --------------------------------------------------------------- solver tune
+def _solver_measure(calls, fused_s=1e-6, composed_s=2e-6):
+    """Injected stand-in for measure_solver_candidate: fused always wins,
+    every invocation recorded."""
+    def fn(m, strategy, c, **kw):
+        calls.append((strategy, c.label()))
+        return (fused_s if strategy == "fused" else composed_s) \
+            + (hash((strategy, c)) % 7) * 1e-12
+    return fn
+
+
+def test_tune_solver_cached_under_method_key(cache):
+    m = M.poisson_2d(16, 16)
+    calls = []
+    st1 = T.tune_solver(m, method="cg", cache=cache,
+                        measure_fn=_solver_measure(calls))
+    assert not st1.cached and len(calls) > 0
+    assert st1.strategy == "fused"           # the injected winner
+    assert {s for s, _ in calls} == {"fused", "composed"}
+    n_first = len(calls)
+
+    st2 = T.tune_solver(m, method="cg", cache=cache,
+                        measure_fn=_solver_measure(calls))
+    assert st2.cached and len(calls) == n_first      # nothing re-measured
+    assert (st2.strategy, st2.layout) == (st1.strategy, st1.layout)
+    assert st2.key == st1.key
+
+    # the method is part of the cache key: bicgstab tunes independently
+    st3 = T.tune_solver(m, method="bicgstab", cache=cache,
+                        measure_fn=_solver_measure(calls))
+    assert not st3.cached and st3.key != st1.key
+
+    # force re-measures through the same key
+    st4 = T.tune_solver(m, method="cg", cache=cache, force=True,
+                        measure_fn=_solver_measure(calls))
+    assert not st4.cached and st4.key == st1.key
+
+
+def test_tune_solver_picks_composed_when_it_wins(cache):
+    m = M.poisson_2d(12, 12)
+    st = T.tune_solver(m, method="cg", cache=cache,
+                       measure_fn=_solver_measure([], fused_s=5e-6,
+                                                  composed_s=1e-6))
+    assert st.strategy == "composed"
+    # every row records (strategy, layout, seconds) for diagnostics
+    assert all({"strategy", "layout", "seconds_per_iter"} <= set(r)
+               for r in st.rows)
