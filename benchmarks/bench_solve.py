@@ -25,7 +25,11 @@ Regression guards (SystemExit):
   at least one matrix;
 * bf16-inner refinement must reach REFINE_TOL true relative residual in
   <= MAX_REFINED_ITER_RATIO x the f32 iteration count (on the SPD
-  matrix, where CG converges).
+  matrix, where CG converges);
+* the degradation ladder's happy path (``repro.solve`` with
+  ``fallback="auto"``, primary rung succeeds) must stay within
+  MAX_LADDER_OVERHEAD of the bare fused solve it wraps — the
+  robustness layer is dispatch bookkeeping, not a second solve.
 """
 from __future__ import annotations
 
@@ -53,6 +57,12 @@ TIME_ROUNDS = 3            # median-of-n probe timings
 MIN_FUSED_SPEEDUP = 1.3    # per-iteration, vs composed_launch, >= 1 matrix
 REFINE_TOL = 1e-6
 MAX_REFINED_ITER_RATIO = 1.5
+MAX_LADDER_OVERHEAD = 0.02   # ladder happy path vs bare fused, fractional
+LADDER_PROBE_ITERS = 300     # the ladder's cost is FIXED per solve (dispatch
+                             # + status sync + certification bookkeeping, no
+                             # per-iteration term) — probe at a realistic
+                             # solve length so the budget reads as steady
+                             # state, not as a fixed cost over a toy solve
 
 # samg is sized to a strong-scaled PER-DEVICE partition — 3.4M rows
 # over the O(1000)-GPU scaling runs the paper targets leaves ~1k rows
@@ -234,6 +244,60 @@ def run(print_rows=True):
     if print_rows:
         print(csv_row(rows[-1]["name"], t_ref * 1e6, rows[-1]["derived"]))
 
+    # -- ladder happy-path overhead (robustness layer dispatch cost) -------
+    # Same fixed-length probe through both doors: bare fused _one_solve
+    # vs repro.solve with the ladder armed.  tol=0 keeps both on the
+    # probe contract (run to exactly LADDER_PROBE_ITERS, certification
+    # pass skipped), so the difference IS the ladder's bookkeeping.
+    name, make, method = _MATRICES[0]
+    m = make()
+    rng = seeded_rng()
+    b = jnp.asarray(rng.standard_normal(m.n_rows).astype(np.float32))
+    op = operator(m, format="sell", x_tiles=1)
+    bare_fn = lambda: jax.block_until_ready(api._one_solve(
+        op, b, method=method, strategy="fused",
+        maxiter=LADDER_PROBE_ITERS, tol=0.0, precond=None).x)
+    ladder_fn = lambda: jax.block_until_ready(api.solve(
+        op, b, method=method, maxiter=LADDER_PROBE_ITERS, tol=0.0,
+        tune="off", fallback="auto").x)
+    bare_fn(); ladder_fn()               # warmup: compile + caches
+    # The dispatch delta under test is tens of us on a ~ms-scale probe
+    # — independent best-of-N drifts by more than that.  Pair the
+    # probes back-to-back each round (shared background load) in
+    # RANDOMISED order (a deterministic alternation can phase-lock with
+    # periodic background load and bias the delta — measured, not
+    # hypothetical), then take the 10%-trimmed mean of the per-round
+    # deltas: drift cancels within a pair, outlier rounds drop out.
+    order_rng = np.random.default_rng(0)
+    samples_bare, samples_ladder = [], []
+    for _ in range(150):
+        pair = [(bare_fn, samples_bare), (ladder_fn, samples_ladder)]
+        if order_rng.integers(2):
+            pair.reverse()
+        for fn, sink in pair:
+            t0 = time.perf_counter()
+            fn()
+            sink.append(time.perf_counter() - t0)
+    t_bare = min(samples_bare)
+    t_ladder = min(samples_ladder)
+    deltas = sorted(l - b for l, b in zip(samples_ladder, samples_bare))
+    trim = len(deltas) // 10
+    kept = deltas[trim:len(deltas) - trim]
+    ladder_overhead = sum(kept) / len(kept) / t_bare
+    rows.append({
+        "name": f"solve_{method}_{name}_ladder_happy_path",
+        "us_per_call": t_ladder / LADDER_PROBE_ITERS * 1e6,
+        "derived": (f"per-iter; overhead vs bare fused = "
+                    f"{ladder_overhead * 100:+.2f}% "
+                    f"(bare {t_bare / LADDER_PROBE_ITERS * 1e6:.2f}us/iter)"),
+        "seconds_per_iter": t_ladder / LADDER_PROBE_ITERS,
+        "ladder_overhead": ladder_overhead,
+        "matrix": name, "method": method, "strategy": "ladder",
+    })
+    if print_rows:
+        print(csv_row(rows[-1]["name"], rows[-1]["us_per_call"],
+                      rows[-1]["derived"]))
+
     path = write_bench_json("solve", rows)
     print(f"# wrote {path}")
 
@@ -258,6 +322,11 @@ def run(print_rows=True):
             f"REGRESSION: refinement needed {it_ref} inner iterations vs "
             f"{it_f32} f32 iterations "
             f"(> {MAX_REFINED_ITER_RATIO}x budget)")
+    if ladder_overhead > MAX_LADDER_OVERHEAD:
+        raise SystemExit(
+            f"REGRESSION: degradation-ladder happy path adds "
+            f"{ladder_overhead * 100:.2f}% over the bare fused solve "
+            f"(budget {MAX_LADDER_OVERHEAD * 100:.0f}%)")
     print(f"# guards ok: fused {best:.2f}x >= {MIN_FUSED_SPEEDUP}x; "
           f"refined {it_ref} vs f32 {it_f32} iters, true_res "
           f"{true_res:.1e} <= {REFINE_TOL}")

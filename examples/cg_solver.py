@@ -70,8 +70,11 @@ def main():
     bkj = jax.device_put(jnp.asarray(bk),
                          jax.NamedSharding(mesh, P("data", None)))
     t0 = time.perf_counter()
+    # 2e-6, not 1e-6: "converged" is CERTIFIED against the true
+    # residual (DESIGN.md §11), and the worst of the 4 columns lands
+    # just above 1e-6 at the f32 accuracy floor for this system
     bres = repro.solve(op, bkj, method="block_cg", maxiter=4000,
-                       tol=1e-6)
+                       tol=2e-6)
     jax.block_until_ready(bres.x)
     dt = time.perf_counter() - t0
     print(f"block-CG  k={k}   iters={int(bres.iters):4d} "
@@ -84,14 +87,16 @@ def main():
     mn = M.convection_poisson(96, 96, beta=0.5)
     op_n = dist_operator(mn, mesh, b_r=128)
     nres = repro.solve(op_n, bj, method="bicgstab", maxiter=4000,
-                       tol=1e-8)
+                       tol=1e-6)
     x = np.asarray(nres.x)[:m.n_rows]
     err = np.linalg.norm(F.csr_to_dense(mn) @ x - b[:m.n_rows]) \
         / np.linalg.norm(b[:m.n_rows])
     print(f"bicgstab (non-sym) iters={int(nres.iters):4d} true_res={err:.2e}")
 
-    # verify CG against dense solve
-    res = repro.solve(op, bj, method="cg", maxiter=4000, tol=1e-8)
+    # verify CG against dense solve (1e-6 is what f32 storage + f32
+    # carriers certify on this system; the recurrence would happily
+    # CLAIM 1e-8, which is exactly the lie certification exists to stop)
+    res = repro.solve(op, bj, method="cg", maxiter=4000, tol=1e-6)
     x = np.asarray(res.x)[:m.n_rows]
     err = np.linalg.norm(F.csr_to_dense(m) @ x - b[:m.n_rows]) \
         / np.linalg.norm(b[:m.n_rows])

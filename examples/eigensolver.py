@@ -51,8 +51,13 @@ def main():
     for _ in range(20):
         v = op @ v + 7.0 * v
         v = v / jnp.linalg.norm(v)
+    # 1e-4: (sigma*I - H) is near-singular BY DESIGN, so its f32
+    # residual floor sits around 1e-5 — far above what the recurrence
+    # claims.  Certification (DESIGN.md §11) would demote a 1e-8
+    # request to a typed failure; inverse iteration only needs the
+    # direction anyway.
     for _ in range(3):
-        sol = repro.solve(shifted, v, method="cg", tol=1e-8, maxiter=4000)
+        sol = repro.solve(shifted, v, method="cg", tol=1e-4, maxiter=4000)
         v = sol.x / jnp.linalg.norm(sol.x)
     lam = float(v @ (op @ v))            # Rayleigh quotient, original basis
     print(f"inverse-iteration polish:  lam_max~{lam:.6f} "

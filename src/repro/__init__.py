@@ -14,11 +14,13 @@ dispatch), ``repro.tune`` (autotuner), ``repro.serve`` (engines).
 """
 from __future__ import annotations
 
-__all__ = ["solve", "SolveResult", "operator", "dist_operator"]
+__all__ = ["solve", "SolveResult", "SolveFailure", "operator",
+           "dist_operator"]
 
 _LAZY = {
     "solve": "repro.api",
     "SolveResult": "repro.core.solvers",
+    "SolveFailure": "repro.api",
     "operator": "repro.core.operator",
     "dist_operator": "repro.core.operator",
 }

@@ -43,6 +43,7 @@ diagnostics under ``refine``.
 """
 from __future__ import annotations
 
+import math
 import time
 
 import jax
@@ -51,10 +52,25 @@ import jax.numpy as jnp
 from repro.core import solvers as S
 from repro.core.solvers import SolveResult
 
-__all__ = ["solve"]
+__all__ = ["solve", "SolveFailure"]
 
 _METHODS = ("cg", "bicgstab", "block_cg")
 _DEFAULT_MAXITER = {"cg": 500, "bicgstab": 1000, "block_cg": 500}
+
+
+class SolveFailure(RuntimeError):
+    """Raised by :func:`solve` when the degradation ladder is exhausted:
+    every rung either raised or ended in a failure status (breakdown /
+    diverged / non_finite / decertified).  Carries the evidence —
+    ``ladder`` is the per-rung record (label, status or error, certified
+    residual) and ``result`` the last :class:`SolveResult` produced (its
+    ``status``/``diagnostics`` describe the final failure), or ``None``
+    if every rung raised before producing one."""
+
+    def __init__(self, message: str, *, result=None, ladder=None):
+        super().__init__(message)
+        self.result = result
+        self.ladder = list(ladder or [])
 
 
 def _is_host_matrix(a) -> bool:
@@ -176,22 +192,67 @@ def _refined_solve(op, op_lo, b, *, method, strategy, maxiter, tol,
                         tol=inner_tol, precond=precond)
         return rr.x.astype(b.dtype), rr.iters, rr.residual
 
-    x, rn, rounds = S.iterative_refinement(residual_of, inner, b,
-                                           x0=x0, tol=tol)
+    x, rn, rounds, reason = S.iterative_refinement(residual_of, inner, b,
+                                                   x0=x0, tol=tol)
+    # The divergence guard: a stalled or poisoned refinement is a typed
+    # failure (the ladder escalates to the f32 rung), not maxiter worth
+    # of useless corrections.
+    flag = {"stalled": S.STATUS_DIVERGED,
+            "non_finite": S.STATUS_NON_FINITE}.get(reason, 0)
     total = sum(r["inner_iters"] for r in rounds)
-    res = S._result(method, x, total, rn, tol,
+    res = S._result(method, x, total, rn, tol, flag=flag,
+                    diagnostics={"refine_reason": reason,
+                                 "true_residual": rn,
+                                 "certified": reason == "converged"},
                     strategy=f"{inner_strategy}+refined")
     res.info["refine"] = {
         "rounds": rounds,
+        "reason": reason,
         "inner_dtype": str(op_lo.dtype),
         "inner_tol": inner_tol,
     }
     return res
 
 
+def _true_rel_residual(op, b, x) -> float:
+    """Certified relative true residual ||b - A x|| / ||b|| through the
+    operator (max over columns for block RHS) — the arbiter behind
+    ``status == "converged"``."""
+    r = b - S._matvec_of(op)(x)
+    if b.ndim == 1:
+        return float(jnp.linalg.norm(r)
+                     / jnp.maximum(jnp.linalg.norm(b), 1e-30))
+    num = jnp.linalg.norm(r, axis=0)
+    den = jnp.maximum(jnp.linalg.norm(b, axis=0), 1e-30)
+    return float(jnp.max(num / den))
+
+
+def _certify(res: SolveResult, op, b, tol: float) -> SolveResult:
+    """Demote a "converged" claim whose certified true residual misses
+    tol (recurrence drift, a broken kernel, a garbled exchange):
+    certification is the arbiter, not the recurrence.  Skipped when the
+    solver already certified (fused drive / refinement measure the true
+    residual themselves — ``diagnostics["true_residual"]`` present)."""
+    if tol <= 0:
+        return res
+    if "true_residual" not in res.diagnostics:
+        try:
+            rn = _true_rel_residual(op, b, res.x)
+        except Exception as e:                      # certification broke
+            res.diagnostics["certify_error"] = f"{type(e).__name__}: {e}"
+            rn = float("nan")
+        res.diagnostics["true_residual"] = rn
+        res.diagnostics["certified"] = rn == rn and rn <= tol
+    if res.status == "converged" and not res.diagnostics.get("certified"):
+        res.status_code = S.STATUS_DIVERGED
+        res.converged = jnp.asarray(False)
+        res.diagnostics["demoted"] = True
+    return res
+
+
 def solve(a, b, *, method: str = "cg", precond=None, tol: float = 1e-6,
           maxiter: int | None = None, x0=None, tune="auto",
-          refine="auto", format: str = "auto", dtype=None,
+          refine="auto", fallback="auto", format: str = "auto", dtype=None,
           index_dtype="auto", backend="auto",
           **convert_kwargs) -> SolveResult:
     """Solve ``A x = b``; see the module docstring for the decisions
@@ -208,10 +269,23 @@ def solve(a, b, *, method: str = "cg", precond=None, tol: float = 1e-6,
     host matrices (cached; ``"force"`` re-measures), ``"off"`` builds
     the heuristic layout.  ``refine``: ``"auto"`` / ``True`` / ``False``
     mixed-precision refinement, see module docstring.
+
+    ``fallback="auto"`` (default) arms the degradation ladder: a rung
+    that raises or ends in a failure status (breakdown / diverged /
+    non_finite / a "converged" claim demoted by the true-residual
+    certification) falls through fused->composed, bf16-refined->f32,
+    kernel backend->ref and a final escalation retry (fresh x0 + jacobi)
+    — the rungs taken are recorded in ``result.info["ladder"]`` and
+    exhaustion raises a typed :class:`SolveFailure`.  ``fallback="off"``
+    runs only the preferred configuration and returns its typed result
+    (``result.status``) without retrying or raising.  Either way a
+    result with ``status == "converged"`` has a certified true residual
+    ``<= tol`` (see ``result.diagnostics["true_residual"]``).
     """
     if method not in _METHODS:
         raise ValueError(f"method must be one of {_METHODS}; got {method!r}")
-    b = jnp.asarray(b)
+    if not isinstance(b, jax.Array):
+        b = jnp.asarray(b)
     if method == "block_cg" and b.ndim != 2:
         raise ValueError(f"block_cg expects b of shape (n, k); got {b.shape}")
     if method != "block_cg" and b.ndim != 1:
@@ -245,6 +319,8 @@ def solve(a, b, *, method: str = "cg", precond=None, tol: float = 1e-6,
                                force=(tune == "force"))
             strategy_pref = st.strategy
             build_kwargs = st.layout.build_kwargs()
+            if "validate" in convert_kwargs:   # admission gate survives
+                build_kwargs["validate"] = convert_kwargs["validate"]
             info_tune = {"cached": st.cached, "strategy": st.strategy,
                          "layout": st.layout.label()}
         else:
@@ -285,16 +361,145 @@ def solve(a, b, *, method: str = "cg", precond=None, tol: float = 1e-6,
                 else "composed")
 
     t0 = time.perf_counter()
-    if do_refine:
-        res = _refined_solve(op, op_lo, b, method=method, strategy=strategy,
-                             maxiter=maxiter, tol=tol, precond=precond,
-                             x0=x0)
-    else:
-        res = _one_solve(op, b, method=method, strategy=strategy,
-                         maxiter=maxiter, tol=tol, precond=precond, x0=x0)
+    res, ladder = _ladder_solve(op, op_lo, b, method=method,
+                                strategy=strategy, maxiter=maxiter, tol=tol,
+                                precond=precond, x0=x0, fallback=fallback)
     phase_s["solve"] = time.perf_counter() - t0
 
     res.info["phase_s"] = phase_s
     if info_tune is not None:
         res.info["tune"] = info_tune
+    if len(ladder) > 1 or fallback not in ("off", False, None):
+        res.info["ladder"] = ladder
     return res
+
+
+def _build_rungs(op, op_lo, *, method, strategy, precond, fallback):
+    """The degradation ladder, most- to least-aggressive: the preferred
+    configuration, then fused->composed, bf16-refined->f32, kernel
+    backend->ref, and finally a bounded escalation retry (fresh x0 +
+    jacobi where the method and operator support it).  Rungs that would
+    repeat the previous configuration are skipped.
+
+    A GENERATOR on purpose: the happy path consumes only the primary
+    rung, so the fallback rungs' construction cost (imports, backend
+    resolution, diagonal probing) is paid only after a failure — the
+    ladder's happy-path overhead budget is enforced by
+    ``benchmarks.bench_solve.MAX_LADDER_OVERHEAD``."""
+    yield {"label": "primary", "op": op, "op_lo": op_lo,
+           "strategy": strategy, "precond": precond, "fresh_x0": False}
+    if fallback in ("off", False, None):
+        return
+    from repro.core.operator import DeviceOperator
+
+    if strategy == "fused":
+        yield {"label": "fused->composed", "op": op, "op_lo": op_lo,
+               "strategy": "composed", "precond": precond,
+               "fresh_x0": False}
+    if op_lo is not None:
+        yield {"label": "bf16->f32", "op": op, "op_lo": None,
+               "strategy": "composed", "precond": precond,
+               "fresh_x0": False}
+    esc_op = op
+    if isinstance(op, DeviceOperator):
+        from repro.kernels import ops as K
+        if K.resolve_backend(op.backend) == "kernel":
+            esc_op = DeviceOperator(op.dev, backend="ref")
+            yield {"label": "kernel->ref", "op": esc_op,
+                   "op_lo": None, "strategy": "composed",
+                   "precond": precond, "fresh_x0": False}
+    esc_precond = precond
+    if (precond is None and method in ("cg", "bicgstab")
+            and getattr(esc_op, "diagonal", None) is not None):
+        esc_precond = "jacobi"
+    yield {"label": "escalate:fresh-x0"
+           + ("+jacobi" if esc_precond == "jacobi"
+              and precond is None else ""),
+           "op": esc_op, "op_lo": None, "strategy": "composed",
+           "precond": esc_precond, "fresh_x0": True}
+
+
+_FAILURE_STATUSES = ("breakdown", "diverged", "non_finite")
+
+
+def _ladder_solve(op, op_lo, b, *, method, strategy, maxiter, tol, precond,
+                  x0, fallback):
+    """Walk the degradation ladder.  Each rung runs, is certified
+    (:func:`_certify` — the true-residual arbiter), and is recorded;
+    success returns immediately.  ``maxiter`` (status "maxiter") is an
+    honest typed outcome, not a fault — it returns without escalating
+    (except for refined rungs, whose round cap should escalate to the
+    f32 rung, not mask it).  When every rung fails, ``fallback="auto"``
+    surfaces a typed :class:`SolveFailure`; ``fallback="off"`` returns
+    the single rung's typed result as-is."""
+    fallback_on = fallback not in ("off", False, None)
+    if fallback not in ("auto", True, "off", False, None):
+        raise ValueError(f"fallback must be 'auto' or 'off'; got "
+                         f"{fallback!r}")
+    rungs = _build_rungs(op, op_lo, method=method, strategy=strategy,
+                         precond=precond, fallback=fallback)
+    ladder, res, warm = [], None, None
+    for rung in rungs:
+        rung_x0 = None if rung["fresh_x0"] else (x0 if warm is None else warm)
+        try:
+            rn_prev, restarts = float("inf"), 0
+            iters_acc = None
+            while True:
+                if rung["op_lo"] is not None:
+                    res = _refined_solve(rung["op"], rung["op_lo"], b,
+                                         method=method,
+                                         strategy=rung["strategy"],
+                                         maxiter=maxiter, tol=tol,
+                                         precond=rung["precond"], x0=rung_x0)
+                else:
+                    res = _one_solve(rung["op"], b, method=method,
+                                     strategy=rung["strategy"],
+                                     maxiter=maxiter, tol=tol,
+                                     precond=rung["precond"], x0=rung_x0)
+                res = _certify(res, rung["op"], b, tol)
+                status = res.status    # forces the device sync in-try
+                # a warm restart is a continuation of the same solve:
+                # report the rung's cumulative iteration count, not the
+                # (often single-digit) final polish segment's
+                iters_acc = (res.iters if iters_acc is None
+                             else iters_acc + res.iters)
+                res.iters = iters_acc
+                rn = res.diagnostics.get("true_residual")
+                # Certification miss from recurrence drift: warm-restart
+                # the SAME rung — re-seeding from x resets the recurrence
+                # to the true residual (the composed analogue of
+                # _fused_drive's restart) — while it still improves.
+                if (res.diagnostics.get("demoted") and restarts < 2
+                        and rn is not None and math.isfinite(rn)
+                        and rn < rn_prev):
+                    rung_x0, rn_prev, restarts = res.x, rn, restarts + 1
+                    continue
+                break
+        except Exception as e:
+            if not fallback_on:
+                raise                  # single rung: surface the original
+            ladder.append({"rung": rung["label"],
+                           "error": f"{type(e).__name__}: {e}"})
+            continue
+        entry = {"rung": rung["label"], "status": status}
+        if restarts:
+            entry["restarts"] = restarts
+        if rn is not None:
+            entry["true_residual"] = rn
+        ladder.append(entry)
+        if status == "converged":
+            break
+        if status == "maxiter" and rung["op_lo"] is None:
+            break                      # honest out-of-budget — not a fault
+        if not fallback_on:
+            break
+        # warm-start the next rung from any finite partial progress
+        if rn is not None and math.isfinite(rn) and rn < 1.0:
+            warm = res.x
+    else:
+        last = ladder[-1] if ladder else {}
+        raise SolveFailure(
+            f"solve({method}) failed on every ladder rung "
+            f"(last: {last}); see .ladder / .result for diagnostics",
+            result=res, ladder=ladder)
+    return res, ladder

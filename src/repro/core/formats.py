@@ -45,6 +45,9 @@ __all__ = [
     "csr_from_dense",
     "csr_to_dense",
     "csr_from_coo",
+    "validate_csr",
+    "CSRValidationError",
+    "ValidationReport",
     "csr_to_ell",
     "csr_to_pjds",
     "csr_to_sell",
@@ -203,6 +206,106 @@ def csr_from_coo(
     np.add.at(indptr, rows + 1, 1)
     np.cumsum(indptr, out=indptr)
     return CSRMatrix(indptr, cols.astype(np.int32), vals, shape)
+
+
+class CSRValidationError(ValueError):
+    """A host CSR matrix failed admission validation.  ``report`` is the
+    :class:`ValidationReport` with per-issue counts."""
+
+    def __init__(self, message: str, report: "ValidationReport"):
+        super().__init__(message)
+        self.report = report
+
+
+@dataclasses.dataclass
+class ValidationReport:
+    """What :func:`validate_csr` found (and, under ``repair=True``,
+    fixed).  ``issues`` maps issue name -> count; ``ok`` is pre-repair
+    cleanliness, ``repaired`` whether a rebuilt matrix was returned."""
+
+    issues: dict
+    repaired: bool = False
+
+    @property
+    def ok(self) -> bool:
+        return not self.issues
+
+
+def validate_csr(m: CSRMatrix, *, repair: bool = False
+                 ) -> tuple[CSRMatrix, ValidationReport]:
+    """Admission check for a host CSR matrix: structural integrity of
+    ``indptr`` (length, monotone, bounds), column indices in range and
+    sorted per row, no within-row duplicates, finite values.
+
+    ``repair=False`` raises :class:`CSRValidationError` on the first
+    report of ANY issue; ``repair=True`` rebuilds the matrix instead —
+    out-of-range columns and non-finite values are DROPPED, duplicates
+    summed, rows re-sorted (via :func:`csr_from_coo`) — and returns the
+    repaired copy.  A non-monotone / mis-sized ``indptr`` is structural
+    corruption with no trustworthy row boundaries, so it raises even
+    under ``repair=True``.  Returns ``(matrix, report)``; the input is
+    returned untouched (and unscanned structure shared) when clean.
+    """
+    indptr = np.asarray(m.indptr)
+    indices = np.asarray(m.indices)
+    data = np.asarray(m.data)
+    n_rows, n_cols = m.shape
+    issues: dict = {}
+
+    structural = []
+    if indptr.ndim != 1 or len(indptr) != n_rows + 1:
+        structural.append("indptr_shape")
+    else:
+        if int(indptr[0]) != 0 or int(indptr[-1]) != len(indices):
+            structural.append("indptr_bounds")
+        if np.any(np.diff(indptr) < 0):
+            structural.append("indptr_non_monotone")
+    if len(indices) != len(data):
+        structural.append("indices_data_mismatch")
+    if structural:
+        report = ValidationReport({k: 1 for k in structural})
+        raise CSRValidationError(
+            f"CSR structure is corrupt ({', '.join(structural)}): row "
+            "boundaries cannot be trusted, not repairable", report)
+
+    out_of_range = (indices < 0) | (indices >= n_cols)
+    n_oor = int(out_of_range.sum())
+    if n_oor:
+        issues["out_of_range_indices"] = n_oor
+    finite = np.isfinite(data)
+    n_nonfinite = int((~finite).sum())
+    if n_nonfinite:
+        issues["non_finite_values"] = n_nonfinite
+
+    rows = np.repeat(np.arange(n_rows, dtype=np.int64), np.diff(indptr))
+    # sorted-within-row and duplicate detection in one pass over the
+    # (row, col) key sequence: a non-increasing step inside a row is
+    # either out of order or a duplicate
+    if len(indices):
+        keys = rows * max(n_cols, 1) + np.clip(indices, 0, n_cols - 1)
+        step = np.diff(keys)
+        same_row = np.diff(rows) == 0
+        n_dup = int(((step == 0) & same_row).sum())
+        n_unsorted = int(((step < 0) & same_row).sum())
+        if n_dup:
+            issues["duplicate_indices"] = n_dup
+        if n_unsorted:
+            issues["unsorted_indices"] = n_unsorted
+
+    if not issues:
+        return m, ValidationReport({})
+    if not repair:
+        raise CSRValidationError(
+            "CSR failed validation: "
+            + ", ".join(f"{k}={v}" for k, v in issues.items())
+            + " (pass repair=True / validate='repair' to rebuild)",
+            ValidationReport(dict(issues)))
+    keep = finite & ~out_of_range
+    fixed = csr_from_coo(rows[keep], indices[keep].astype(np.int64),
+                         data[keep], m.shape, sum_duplicates=True)
+    fixed = CSRMatrix(fixed.indptr, fixed.indices,
+                      fixed.data.astype(data.dtype), m.shape)
+    return fixed, ValidationReport(dict(issues), repaired=True)
 
 
 # --------------------------------------------------------------------------

@@ -60,12 +60,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["SolveResult", "cg", "bicgstab", "block_cg",
+__all__ = ["SolveResult", "STATUS_NAMES", "cg", "bicgstab", "block_cg",
            "fused_cg", "fused_bicgstab", "iterative_refinement",
            "jacobi", "lanczos", "power_iteration", "tridiag_eigvals",
            "block_lanczos", "block_tridiag_eigvals"]
@@ -77,6 +78,34 @@ Operator = "SparseOperator | MatVec"     # accepted by every solver
 MatVecDots = Callable[[jax.Array, jax.Array, jax.Array], tuple]
 
 
+# Terminal status codes.  Inside the compiled loops the same integers
+# serve as the failure FLAG carried through the while_loop state, with 0
+# meaning "no failure observed yet"; ``_result`` resolves the final code
+# (a flag of 0 becomes converged or maxiter depending on the residual).
+STATUS_CONVERGED = 0
+STATUS_MAXITER = 1
+STATUS_BREAKDOWN = 2
+STATUS_DIVERGED = 3
+STATUS_NON_FINITE = 4
+STATUS_NAMES = ("converged", "maxiter", "breakdown", "diverged",
+                "non_finite")
+
+# Failure-detection thresholds (active only when tol > 0 — the tuner's
+# and benchmark's tol <= 0 fixed-length probes must run to maxiter
+# untouched).  DIVERGED when the squared RELATIVE residual exceeds
+# _DIVERGE_REL2 (relative residual 1e6 from a start of ~1).
+# Stagnation — two consecutive _STAG_WINDOW checkpoints without a
+# _STAG_RTOL relative improvement (see _health) — reports as BREAKDOWN
+# (the recurrence has stopped making progress, e.g. a singular
+# operator's residual floor).  Checkpointed progress, NOT a
+# running-minimum window: ill-conditioned f32 CG is non-monotone
+# enough to spend >1500 iterations above its starting residual while
+# genuinely converging.
+_DIVERGE_REL2 = 1e12
+_STAG_WINDOW = 500
+_STAG_RTOL = 0.01
+
+
 @dataclasses.dataclass
 class SolveResult:
     """The one result type every linear solver returns.
@@ -84,10 +113,14 @@ class SolveResult:
     ``x``/``iters``/``residual`` stay lazy jax arrays (no forced device
     sync); ``residual`` is the relative residual ||r||/||b|| the solver
     terminated on (per column, shape (k,), for ``block_cg``) and
-    ``converged`` is ``all(residual <= tol)``.  ``info`` carries
-    strategy / per-phase timing / refinement diagnostics — populated by
-    the solver (``strategy``) and extended by ``repro.solve``
-    (``phase_s``, ``tune``, ``refine``).
+    ``converged`` is ``all(residual <= tol)``.  ``status_code`` is the
+    device-side termination code (see ``STATUS_NAMES``); reading the
+    ``status`` string forces the sync.  ``diagnostics`` carries
+    failure-path detail (certified true residual, restart counts,
+    refinement stall reasons, degradation-ladder rungs).  ``info``
+    carries strategy / per-phase timing / refinement diagnostics —
+    populated by the solver (``strategy``) and extended by
+    ``repro.solve`` (``phase_s``, ``tune``, ``refine``, ``ladder``).
     """
 
     x: jax.Array
@@ -96,13 +129,27 @@ class SolveResult:
     converged: jax.Array
     method: str = ""
     info: dict = dataclasses.field(default_factory=dict)
+    status_code: jax.Array | int = 0
+    diagnostics: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def status(self) -> str:
+        """Termination status string — one of ``STATUS_NAMES``.  This
+        forces the device sync (the code is a lazy array)."""
+        return STATUS_NAMES[int(self.status_code)]
 
 
-def _result(method: str, x, iters, residual, tol: float,
-            **info) -> SolveResult:
+def _result(method: str, x, iters, residual, tol: float, *,
+            flag=0, diagnostics=None, **info) -> SolveResult:
+    res = jnp.asarray(residual)
+    flag = jnp.asarray(flag, jnp.int32)
+    ok = jnp.all(res <= tol)
+    code = jnp.where(ok, STATUS_CONVERGED,
+                     jnp.where(flag != 0, flag, STATUS_MAXITER))
     return SolveResult(x=x, iters=iters, residual=residual,
-                       converged=jnp.all(residual <= tol),
-                       method=method, info=dict(info))
+                       converged=ok, method=method, info=dict(info),
+                       status_code=code,
+                       diagnostics=dict(diagnostics or {}))
 
 
 def _matvec_of(a) -> MatVec:
@@ -171,8 +218,59 @@ def _not_done(res2, tol):
     means "run to maxiter" — the tuner's and benchmark's fixed-length
     probes rely on this, since a converged f32 residual (or the fused
     look-ahead's clamp) can reach EXACTLY zero and would otherwise end
-    the probe early."""
-    return (res2 > tol * tol) | (tol <= 0.0)
+    the probe early.  A NON-FINITE ``res2`` exits the loop (for tol > 0)
+    — but as a detected failure, not as convergence: the loop bodies
+    flag it via :func:`_health` and the result reports
+    ``status == "non_finite"``.  (``res2 > tol*tol`` alone is False for
+    NaN, which used to end the loop with the failure masked.)"""
+    return (tol <= 0.0) | (jnp.isfinite(res2) & (res2 > tol * tol))
+
+
+def _health(flag, rel2, best, since, *, breakdown, check):
+    """One failure-detection step shared by every solver loop body.
+
+    ``rel2`` is the squared relative residual the body just produced;
+    ``breakdown`` the body's method-specific breakdown predicate (CG
+    ``p·Ap <= 0``, BiCGStab ``rho -> 0``, block-CG a non-finite /
+    indefinite Gram step); ``check`` gates everything off for tol <= 0
+    probe runs.  Returns the updated ``(flag, best, since)`` — ``flag``
+    latches the FIRST failure observed (0 = healthy).
+
+    Stagnation is judged at CHECKPOINTS, not against a running minimum:
+    ``best`` holds the residual at the last checkpoint and ``since``
+    the iterations since the last checkpoint that showed progress.
+    Every ``_STAG_WINDOW`` iterations the current residual is compared
+    against the previous checkpoint's; a relative improvement of at
+    least ``_STAG_RTOL`` resets the clock, and only TWO consecutive
+    no-progress checkpoints fire BREAKDOWN.  A running-minimum window
+    false-positives on ill-conditioned CG, whose residual is
+    non-monotone: measured on a cond~1e6 SPD system, the residual
+    climbs to 7.6x its starting value and sets no new minimum for the
+    first ~1500 of the 15000 iterations it genuinely needs — yet it
+    IMPROVES between any two adjacent checkpoints on its way back
+    down, which is exactly what this predicate measures.  A singular
+    operator's residual floor is flat across checkpoints and still
+    fires, one window later."""
+    finite = jnp.isfinite(rel2)
+    since = since + 1
+    at_ckpt = (since % _STAG_WINDOW) == 0
+    progressed = finite & (rel2 <= best * (1.0 - _STAG_RTOL))
+    stalled = at_ckpt & ~progressed & (since >= 2 * _STAG_WINDOW)
+    new = jnp.where(~finite, STATUS_NON_FINITE,
+          jnp.where(breakdown, STATUS_BREAKDOWN,
+          jnp.where(rel2 > _DIVERGE_REL2, STATUS_DIVERGED,
+          jnp.where(stalled, STATUS_BREAKDOWN, 0))))
+    new = jnp.where(check, new, 0).astype(jnp.int32)
+    best = jnp.where(at_ckpt, rel2, best)
+    since = jnp.where(at_ckpt & progressed, 0, since)
+    return jnp.where(flag != 0, flag, new), best, since
+
+
+def _nz(d):
+    """Replace an exactly-zero denominator with a tiny value — keeps
+    probe-mode (tol <= 0) carriers finite after a residual hits 0.0
+    instead of spreading NaN through the remaining timed iterations."""
+    return jnp.where(d == 0, jnp.asarray(1e-30, d.dtype), d)
 
 
 def _precond_of(M, a) -> MatVec | None:
@@ -199,10 +297,21 @@ def cg(a: Operator, b: jax.Array, *, x0: jax.Array | None = None,
     pre = _precond_of(M, a)
     x0 = jnp.zeros_like(b) if x0 is None else x0
     if pre is None:
-        x, k, res = _cg(matvec, b, x0, maxiter, tol)
+        x, k, res, flag = _cg(matvec, b, x0, maxiter, tol)
     else:
-        x, k, res = _pcg(matvec, pre, b, x0, maxiter, tol)
-    return _result("cg", x, k, res, tol, strategy="composed")
+        x, k, res, flag = _pcg(matvec, pre, b, x0, maxiter, tol)
+    return _result("cg", x, k, res, tol, flag=flag, strategy="composed")
+
+
+def _health_init(rel2, tol):
+    """Initial (flag, best, since) carriers: a non-finite INITIAL
+    residual (poisoned b / x0 / values) is flagged before the loop
+    ever runs a body."""
+    check = tol > 0.0
+    flag = jnp.where(check & ~jnp.isfinite(rel2),
+                     STATUS_NON_FINITE, 0).astype(jnp.int32)
+    best = jnp.where(jnp.isfinite(rel2), rel2, jnp.inf)
+    return flag, jnp.asarray(best, jnp.asarray(rel2).dtype), jnp.int32(0)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 3))
@@ -213,23 +322,33 @@ def _cg(matvec: MatVec, b: jax.Array, x0: jax.Array,
     p = r
     rs = jnp.vdot(r, r)
     b2 = jnp.maximum(jnp.vdot(b, b), 1e-30)
+    check = tol > 0.0
+    flag, best, since = _health_init(rs / b2, tol)
 
     def cond(state):
-        _, _, _, rs, k = state
-        return _not_done(rs / b2, tol) & (k < maxiter)
+        _, _, _, rs, k, flag, _, _ = state
+        return (flag == 0) & _not_done(rs / b2, tol) & (k < maxiter)
 
     def body(state):
-        x, r, p, rs, k = state
+        x, r, p, rs, k, flag, best, since = state
         ap = matvec(p)
-        alpha = rs / jnp.vdot(p, ap)
+        pap = jnp.vdot(p, ap)
+        # p·Ap <= 0 => A is not SPD along p: CG breakdown.  Zero the
+        # step so x/r stay at the last healthy iterate (the select
+        # fuses into the axpy — no extra memory pass).
+        bad = check & ((pap <= 0.0) | ~jnp.isfinite(pap))
+        alpha = jnp.where(bad, 0.0, rs / _nz(pap))
         x = x + alpha * p
         r = r - alpha * ap
         rs_new = jnp.vdot(r, r)
-        p = r + (rs_new / rs) * p
-        return x, r, p, rs_new, k + 1
+        flag, best, since = _health(flag, rs_new / b2, best, since,
+                                    breakdown=bad, check=check)
+        p = r + (rs_new / _nz(rs)) * p
+        return x, r, p, rs_new, k + 1, flag, best, since
 
-    x, r, p, rs, k = jax.lax.while_loop(cond, body, (x, r, p, rs, jnp.int32(0)))
-    return x, k, jnp.sqrt(rs / b2)
+    x, r, p, rs, k, flag, best, since = jax.lax.while_loop(
+        cond, body, (x, r, p, rs, jnp.int32(0), flag, best, since))
+    return x, k, jnp.sqrt(rs / b2), flag
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 4))
@@ -243,25 +362,32 @@ def _pcg(matvec: MatVec, precond: MatVec, b: jax.Array, x0: jax.Array,
     rz = jnp.vdot(r, z)
     rs = jnp.vdot(r, r)
     b2 = jnp.maximum(jnp.vdot(b, b), 1e-30)
+    check = tol > 0.0
+    flag, best, since = _health_init(rs / b2, tol)
 
     def cond(state):
-        _, _, _, _, rs, k = state
-        return _not_done(rs / b2, tol) & (k < maxiter)
+        _, _, _, _, rs, k, flag, _, _ = state
+        return (flag == 0) & _not_done(rs / b2, tol) & (k < maxiter)
 
     def body(state):
-        x, r, p, rz, rs, k = state
+        x, r, p, rz, rs, k, flag, best, since = state
         ap = matvec(p)
-        alpha = rz / jnp.vdot(p, ap)
+        pap = jnp.vdot(p, ap)
+        bad = check & ((pap <= 0.0) | ~jnp.isfinite(pap))
+        alpha = jnp.where(bad, 0.0, rz / _nz(pap))
         x = x + alpha * p
         r = r - alpha * ap
         z = precond(r)
         rz_new = jnp.vdot(r, z)
-        p = z + (rz_new / rz) * p
-        return x, r, p, rz_new, jnp.vdot(r, r), k + 1
+        rs_new = jnp.vdot(r, r)
+        flag, best, since = _health(flag, rs_new / b2, best, since,
+                                    breakdown=bad, check=check)
+        p = z + (rz_new / _nz(rz)) * p
+        return x, r, p, rz_new, rs_new, k + 1, flag, best, since
 
-    x, r, p, rz, rs, k = jax.lax.while_loop(
-        cond, body, (x, r, p, rz, rs, jnp.int32(0)))
-    return x, k, jnp.sqrt(rs / b2)
+    x, r, p, rz, rs, k, flag, best, since = jax.lax.while_loop(
+        cond, body, (x, r, p, rz, rs, jnp.int32(0), flag, best, since))
+    return x, k, jnp.sqrt(rs / b2), flag
 
 
 def bicgstab(a: Operator, b: jax.Array, *, x0: jax.Array | None = None,
@@ -277,8 +403,9 @@ def bicgstab(a: Operator, b: jax.Array, *, x0: jax.Array | None = None,
     matvec = _matvec_of(a)
     pre = _precond_of(M, a) or _identity
     x0 = jnp.zeros_like(b) if x0 is None else x0
-    x, k, res = _bicgstab(matvec, pre, b, x0, maxiter, tol)
-    return _result("bicgstab", x, k, res, tol, strategy="composed")
+    x, k, res, flag = _bicgstab(matvec, pre, b, x0, maxiter, tol)
+    return _result("bicgstab", x, k, res, tol, flag=flag,
+                   strategy="composed")
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1, 4))
@@ -295,32 +422,47 @@ def _bicgstab(matvec: MatVec, precond: MatVec, b: jax.Array, x0: jax.Array,
     rhat = r                       # shadow residual, fixed
     one = jnp.asarray(1.0, dt)
     b2 = jnp.maximum(jnp.vdot(b, b), 1e-30)
+    check = tol > 0.0
+    flag, best, since = _health_init(jnp.vdot(r, r) / b2, tol)
     state = (x, r, jnp.zeros_like(b), jnp.zeros_like(b),
-             one, one, one, jnp.vdot(r, r), jnp.int32(0))
+             one, one, one, jnp.vdot(r, r), jnp.int32(0),
+             flag, best, since)
 
     def cond(state):
-        rs, k = state[-2], state[-1]
-        return _not_done(rs / b2, tol) & (k < maxiter)
+        rs, k, flag = state[7], state[8], state[9]
+        return (flag == 0) & _not_done(rs / b2, tol) & (k < maxiter)
 
     def body(state):
-        x, r, p, v, rho, alpha, omega, _rs, k = state
+        x, r, p, v, rho, alpha, omega, _rs, k, flag, best, since = state
         rho_new = jnp.vdot(rhat, r)
         beta = (rho_new / _safe(rho)) * (alpha / _safe(omega))
         p = r + beta * (p - omega * v)
         p_hat = precond(p)
         v = matvec(p_hat)
-        alpha = rho_new / _safe(jnp.vdot(rhat, v))
+        rhat_v = jnp.vdot(rhat, v)
+        alpha = rho_new / _safe(rhat_v)
         s = r - alpha * v
         s_hat = precond(s)
         t = matvec(s_hat)
-        omega = jnp.vdot(t, s) / _safe(jnp.vdot(t, t))
+        tt = jnp.vdot(t, t)
+        omega = jnp.vdot(t, s) / _safe(tt)
         x = x + alpha * p_hat + omega * s_hat
         r = s - omega * t
-        return (x, r, p, v, rho_new, alpha, omega, jnp.vdot(r, r), k + 1)
+        rs_new = jnp.vdot(r, r)
+        # rho -> 0 (serious breakdown: r orthogonal to the shadow
+        # residual) or a vanishing <rhat, Ap> / <t, t> — the _safe
+        # clamps keep the carriers finite, the flag makes it a typed
+        # failure instead of silent garbage.
+        bad = ((jnp.abs(rho_new) <= tiny) | (jnp.abs(rhat_v) <= tiny)
+               | (jnp.abs(tt) <= tiny))
+        flag, best, since = _health(flag, rs_new / b2, best, since,
+                                    breakdown=bad, check=check)
+        return (x, r, p, v, rho_new, alpha, omega, rs_new, k + 1,
+                flag, best, since)
 
-    x, r, p, v, rho, alpha, omega, rs, k = jax.lax.while_loop(
-        cond, body, state)
-    return x, k, jnp.sqrt(rs / b2)
+    out = jax.lax.while_loop(cond, body, state)
+    x, rs, k, flag = out[0], out[7], out[8], out[9]
+    return x, k, jnp.sqrt(rs / b2), flag
 
 
 # --------------------------------------------------------------------------
@@ -383,19 +525,43 @@ def _fused_drive(loop_fn, method: str, matvec_dots: MatVecDots,
     """Host driver shared by the fused solvers: run the compiled loop,
     certify the true residual with one composed pass, warm-restart while
     it still improves.  At most a handful of host syncs per SOLVE —
-    versus one per iteration for a scipy-style stepped loop."""
+    versus one per iteration for a scipy-style stepped loop.
+
+    The certification is the ARBITER: a loop that exits claiming
+    convergence (its look-ahead recurrence under tol) whose certified
+    TRUE residual stays above tol is demoted to ``status="diverged"``
+    with the evidence in ``diagnostics`` — never returned as converged.
+    """
     x = jnp.zeros_like(b) if x0 is None else x0
     total, restarts = 0, 0
     rn_prev = float("inf")
+    flag, demoted = 0, False
     while True:
-        x, k, _ = loop_fn(matvec_dots, b, x, maxiter - total, tol)
+        x, k, _, lflag = loop_fn(matvec_dots, b, x, maxiter - total, tol)
         total += int(k)
+        flag = int(lflag)
         rn = float(_true_residual(matvec_dots, b, x))
-        if rn <= tol or total >= maxiter or int(k) == 0 or rn >= rn_prev:
+        if not math.isfinite(rn):
+            flag = flag or STATUS_NON_FINITE
+            break
+        if (tol > 0 and rn <= tol) or flag != 0 or total >= maxiter:
+            break
+        if int(k) == 0 or rn >= rn_prev:
+            # the look-ahead claimed convergence (or a restart made no
+            # progress) but the certified residual disagrees — demote
+            demoted = tol > 0
             break
         rn_prev = rn
         restarts += 1
-    return _result(method, x, total, rn, tol,
+    if demoted and flag == 0:
+        flag = STATUS_DIVERGED
+    diagnostics = {"true_residual": rn, "restarts": restarts,
+                   "certified": bool(math.isfinite(rn) and tol > 0
+                                     and rn <= tol)}
+    if demoted:
+        diagnostics["demoted"] = True
+    return _result(method, x, total, rn, tol, flag=flag,
+                   diagnostics=diagnostics,
                    strategy="fused", restarts=restarts)
 
 
@@ -411,25 +577,30 @@ def _fused_cg(matvec_dots: MatVecDots, b: jax.Array, x0: jax.Array,
     r = b - matvec_dots(x0, x0, b)[0]
     rs = jnp.vdot(r, r)            # exact, once per (re)start
     b2 = jnp.maximum(jnp.vdot(b, b), 1e-30)
+    check = tol > 0.0
+    flag, best, since = _health_init(rs / b2, tol)
 
     def cond(state):
-        _, _, _, rs, k = state
-        return _not_done(rs / b2, tol) & (k < maxiter)
+        _, _, _, rs, k, flag, _, _ = state
+        return (flag == 0) & _not_done(rs / b2, tol) & (k < maxiter)
 
     def body(state):
-        x, r, p, _rs, k = state
+        x, r, p, _rs, k, flag, best, since = state
         ap, pap, r_ap, apap, rr, _ = matvec_dots(p, p, r)  # rr exact
-        alpha = rr / pap
+        bad = check & ((pap <= 0.0) | ~jnp.isfinite(pap))
+        alpha = jnp.where(bad, 0.0, rr / _nz(pap))
         x = x + alpha * p
         r = r - alpha * ap
         rs_new = jnp.maximum(rr - 2.0 * alpha * r_ap + alpha * alpha * apap,
                              0.0)
+        flag, best, since = _health(flag, rs_new / b2, best, since,
+                                    breakdown=bad, check=check)
         p = r + (rs_new / jnp.maximum(rr, 1e-30)) * p
-        return x, r, p, rs_new, k + 1
+        return x, r, p, rs_new, k + 1, flag, best, since
 
-    x, r, p, rs, k = jax.lax.while_loop(
-        cond, body, (x0, r, r, rs, jnp.int32(0)))
-    return x, k, jnp.sqrt(rs / b2)
+    x, r, p, rs, k, flag, best, since = jax.lax.while_loop(
+        cond, body, (x0, r, r, rs, jnp.int32(0), flag, best, since))
+    return x, k, jnp.sqrt(rs / b2), flag
 
 
 @functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
@@ -446,18 +617,21 @@ def _fused_bicgstab(matvec_dots: MatVecDots, b: jax.Array, x0: jax.Array,
     rs0 = jnp.vdot(r, r)           # exact, once per (re)start
     b2 = jnp.maximum(jnp.vdot(b, b), 1e-30)
     one = jnp.asarray(1.0, dt)
-    # state: (x, r, p, v, rho, rho_prev, alpha, omega, rs, k);
+    check = tol > 0.0
+    flag, best, since = _health_init(rs0 / b2, tol)
+    # state: (x, r, p, v, rho, rho_prev, alpha, omega, rs, k, health);
     # rho_1 = <rhat, r0> = ||r0||^2 and rho_0 := rho_1 so the first
     # beta is (rho_1/rho_0)(alpha/omega) = 1 and p_1 = r0 (v = p = 0).
     state = (x0, r, jnp.zeros_like(b), jnp.zeros_like(b),
-             rs0, rs0, one, one, rs0, jnp.int32(0))
+             rs0, rs0, one, one, rs0, jnp.int32(0), flag, best, since)
 
     def cond(state):
-        rs, k = state[-2], state[-1]
-        return _not_done(rs / b2, tol) & (k < maxiter)
+        rs, k, flag = state[8], state[9], state[10]
+        return (flag == 0) & _not_done(rs / b2, tol) & (k < maxiter)
 
     def body(state):
-        x, r, p, v, rho, rho_prev, alpha, omega, rs, k = state
+        (x, r, p, v, rho, rho_prev, alpha, omega, rs, k,
+         flag, best, since) = state
         beta = (rho / _safe(rho_prev)) * (alpha / _safe(omega))
         p = r + beta * (p - omega * v)
         v, rhat_v, _r_v, _vv, _rr, _ = matvec_dots(p, rhat, r)
@@ -472,11 +646,16 @@ def _fused_bicgstab(matvec_dots: MatVecDots, b: jax.Array, x0: jax.Array,
         r = s - omega * t
         rs_new = jnp.maximum(ss - 2.0 * omega * t_s + omega * omega * tt, 0.0)
         rho_next = rhat_s - omega * t_rhat
-        return (x, r, p, v, rho_next, rho, alpha, omega, rs_new, k + 1)
+        bad = ((jnp.abs(rho) <= tiny) | (jnp.abs(rhat_v) <= tiny)
+               | (jnp.abs(tt) <= tiny))
+        flag, best, since = _health(flag, rs_new / b2, best, since,
+                                    breakdown=bad, check=check)
+        return (x, r, p, v, rho_next, rho, alpha, omega, rs_new, k + 1,
+                flag, best, since)
 
     out = jax.lax.while_loop(cond, body, state)
-    x, rs, k = out[0], out[-2], out[-1]
-    return x, k, jnp.sqrt(rs / b2)
+    x, rs, k, flag = out[0], out[8], out[9], out[10]
+    return x, k, jnp.sqrt(rs / b2), flag
 
 
 # --------------------------------------------------------------------------
@@ -500,8 +679,13 @@ def iterative_refinement(residual_of: MatVec, inner_solve, b: jax.Array, *,
 
     Host-driven by design: a handful of rounds, each a full compiled
     inner solve, with per-round diagnostics the caller can report.
-    Returns ``(x, rel_residual, rounds)`` where ``rounds`` is one dict
-    per correction (inner iteration count, residual entering the round).
+    Returns ``(x, rel_residual, rounds, reason)`` where ``rounds`` is
+    one dict per correction (inner iteration count, residual entering
+    the round) and ``reason`` names why the outer loop stopped:
+    ``"converged"``, ``"max_rounds"``, ``"stalled"`` (a round failed to
+    reduce the true residual — the divergence guard; the caller should
+    escalate to a full-precision solve instead of burning more rounds)
+    or ``"non_finite"`` (a poisoned operand/correction).
     """
     bn = max(float(jnp.linalg.norm(b)), 1e-30)
     x = jnp.zeros_like(b) if x0 is None else x0
@@ -510,14 +694,24 @@ def iterative_refinement(residual_of: MatVec, inner_solve, b: jax.Array, *,
     while True:
         r = residual_of(x)
         rn = float(jnp.linalg.norm(r)) / bn
-        if rn <= tol or len(rounds) >= max_rounds or rn >= rn_prev:
+        if not math.isfinite(rn):
+            reason = "non_finite"
+            break
+        if rn <= tol:
+            reason = "converged"
+            break
+        if len(rounds) >= max_rounds:
+            reason = "max_rounds"
+            break
+        if rn >= rn_prev:
+            reason = "stalled"
             break
         dx, iters, inner_res = inner_solve(r)
         x = x + dx.astype(x.dtype)
         rounds.append({"residual_in": rn, "inner_iters": int(iters),
                        "inner_residual": float(inner_res)})
         rn_prev = rn
-    return x, rn, rounds
+    return x, rn, rounds, reason
 
 
 def lanczos(a: Operator, v0: jax.Array, m: int = 50):
@@ -573,10 +767,11 @@ def block_cg(a: Operator, b: jax.Array, *, x0: jax.Array | None = None,
     column's relative residual is below ``tol``; ``result.residual`` is
     the per-column vector, ``result.converged`` requires all columns.
     """
-    x, k_it, res = _block_cg(_matvec_of(a), b,
-                             jnp.zeros_like(b) if x0 is None else x0,
-                             maxiter, tol)
-    return _result("block_cg", x, k_it, res, tol, strategy="composed")
+    x, k_it, res, flag = _block_cg(_matvec_of(a), b,
+                                   jnp.zeros_like(b) if x0 is None else x0,
+                                   maxiter, tol)
+    return _result("block_cg", x, k_it, res, tol, flag=flag,
+                   strategy="composed")
 
 
 @functools.partial(jax.jit, static_argnums=(0, 3))
@@ -587,26 +782,43 @@ def _block_cg(matvec: MatVec, b: jax.Array, x0: jax.Array,
     p = r
     rtr = r.T @ r                                     # (k, k)
     b2 = jnp.maximum(jnp.sum(b * b, axis=0), 1e-30)   # (k,)
+    check = tol > 0.0
+    flag, best, since = _health_init(
+        jnp.max(jnp.diagonal(rtr) / b2), tol)
 
     def cond(state):
-        _, _, _, rtr, k_it = state
+        _, _, _, rtr, k_it, flag, _, _ = state
         res2 = jnp.diagonal(rtr) / b2
-        return jnp.any(_not_done(res2, tol)) & (k_it < maxiter)
+        return ((flag == 0) & jnp.any(_not_done(res2, tol))
+                & (k_it < maxiter))
 
     def body(state):
-        x, r, p, rtr, k_it = state
+        x, r, p, rtr, k_it, flag, best, since = state
         ap = matvec(p)
-        alpha = _ridge_solve(p.T @ ap, rtr)           # (k, k)
+        ptap = p.T @ ap
+        alpha = _ridge_solve(ptap, rtr)               # (k, k)
+        # A direction with p_j·Ap_j <= 0 (indefinite A) or a Gram solve
+        # gone non-finite (the k-by-k factorization failing on a
+        # poisoned/singular block) is a block breakdown: zero the step
+        # so x/r hold the last healthy iterate.  Columns already under
+        # tol are exempt — their directions legitimately shrink to 0.
+        live = jnp.diagonal(rtr) / b2 > tol * tol
+        bad = check & (jnp.any(live & (jnp.diagonal(ptap) <= 0.0))
+                       | ~jnp.all(jnp.isfinite(alpha)))
+        alpha = jnp.where(bad, jnp.zeros_like(alpha), alpha)
         x = x + p @ alpha
         r = r - ap @ alpha
         rtr_new = r.T @ r
+        flag, best, since = _health(
+            flag, jnp.max(jnp.diagonal(rtr_new) / b2), best, since,
+            breakdown=bad, check=check)
         beta = _ridge_solve(rtr, rtr_new)
         p = r + p @ beta
-        return x, r, p, rtr_new, k_it + 1
+        return x, r, p, rtr_new, k_it + 1, flag, best, since
 
-    x, r, p, rtr, k_it = jax.lax.while_loop(
-        cond, body, (x, r, p, rtr, jnp.int32(0)))
-    return x, k_it, jnp.sqrt(jnp.diagonal(rtr) / b2)
+    x, r, p, rtr, k_it, flag, best, since = jax.lax.while_loop(
+        cond, body, (x, r, p, rtr, jnp.int32(0), flag, best, since))
+    return x, k_it, jnp.sqrt(jnp.diagonal(rtr) / b2), flag
 
 
 def _chol_qr(w: jax.Array):

@@ -610,6 +610,7 @@ def as_device(
     index_dtype="auto",
     x_tiles: Union[int, str] = "auto",
     tune: Tune = "off",
+    validate: str = "off",
 ) -> SparseDevice:
     """Wrap a matrix as a :class:`SparseDevice`, converting at most once.
 
@@ -647,6 +648,15 @@ def as_device(
     overridden.  A caller-supplied ``diag_align`` is ignored under
     tuning: the build must match the measured geometry exactly.
 
+    ``validate`` is the admission gate for host matrices
+    (``formats.validate_csr``): ``"check"`` raises
+    ``formats.CSRValidationError`` on out-of-range/unsorted indices,
+    duplicates, non-finite values or corrupt ``indptr``; ``"repair"``
+    rebuilds the matrix (dropping poisoned entries, merging duplicates)
+    and converts the repaired copy; ``"off"`` (default) trusts the
+    input.  Existing SparseDevice inputs skip validation (they were
+    admitted when first converted).
+
     This is the conversion/caching layer under the operator protocol —
     new code should usually go one level up and call
     ``repro.core.operator.operator(a)``, which adds transpose,
@@ -663,6 +673,12 @@ def as_device(
     if not isinstance(a, F.CSRMatrix):
         raise TypeError(f"cannot dispatch on {type(a)}")
 
+    if validate not in ("off", "check", "repair"):
+        raise ValueError(f"validate must be 'off', 'check' or 'repair'; "
+                         f"got {validate!r}")
+    if validate != "off":
+        a, _report = F.validate_csr(a, repair=(validate == "repair"))
+
     if tune not in ("off", "auto", "force"):
         raise ValueError(f"tune must be 'off', 'auto' or 'force'; "
                          f"got {tune!r}")
@@ -677,6 +693,7 @@ def as_device(
         # under the cached decision.
         return as_device(a, dtype=dtype, index_dtype=index_dtype,
                          tune="off", **best.build_kwargs())
+
 
     if x_tiles == "auto":
         # Size the tile by the RUNTIME vector width (>= f32), not the

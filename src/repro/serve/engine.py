@@ -145,9 +145,13 @@ class Engine:
 class SolveRequest:
     rid: int
     b: np.ndarray                # (n,) right-hand side, original basis
+    deadline_s: Optional[float] = None   # seconds from run() start; None = no deadline
     x: Optional[np.ndarray] = None
     iters: int = 0
     residual: float = float("inf")
+    status: str = "pending"      # converged/maxiter/breakdown/diverged/
+    #                              non_finite/rejected/shed/error
+    diagnostics: dict = dataclasses.field(default_factory=dict)
     done: bool = False
 
 
@@ -161,16 +165,34 @@ class SolveEngine:
     column converges instantly) and solved with one multi-RHS block-CG,
     so every CG iteration streams the matrix once for the whole batch.
     SPD systems only — the block-CG contract.
+
+    Hardening (DESIGN.md §11): right-hand sides are admission-checked
+    (non-finite or wrong-shape ``b`` is ``rejected`` before it can
+    poison a batch), requests carry optional per-request deadlines
+    (expired requests are ``shed`` before dispatch, never solved), and
+    every batch is CERTIFIED per column against the original system.
+    When certification fails for some columns — one poisoned RHS NaNs
+    the shared block-CG Gram matrix, taking every column down with it —
+    the engine bisects the group, re-solves the halves, and keeps
+    splitting until healthy requests succeed and only the genuinely
+    poisoned request fails, with a typed ``status`` + diagnostics.
     """
 
     def __init__(self, op, *, slots: int = 4, maxiter: int = 2000,
-                 tol: float = 1e-6, jacobi_precond: bool = False):
+                 tol: float = 1e-6, jacobi_precond: bool = False,
+                 cert_slack: float = 10.0):
         if op.shape[0] != op.shape[1]:
             raise ValueError("SolveEngine serves square systems")
         self.op = op
         self.slots = slots
         self.maxiter = maxiter
         self.tol = tol
+        # tol stops the recurrence; certification accepts within
+        # cert_slack * tol.  The slack absorbs recurrence-vs-true
+        # drift near the storage dtype's accuracy floor (f32 at
+        # tol=1e-7 lands a hair above tol) — a poisoned column sits
+        # at NaN or O(1), orders of magnitude past any sane slack.
+        self._cert_tol = tol * cert_slack
         # Jacobi scaling as a per-column pre/post transform keeps the
         # block solver untouched: solve (D^-1/2 A D^-1/2) x' = D^-1/2 b.
         # The scaled-apply closure is built ONCE — it is the block
@@ -185,7 +207,12 @@ class SolveEngine:
             s = jnp.asarray(self._scale)[:, None]
             self._scaled_apply = lambda X: s * op.matmat(s * X)
 
-    def _solve_batch(self, batch: List[SolveRequest]) -> None:
+    def _dispatch(self, batch: List[SolveRequest]):
+        """One block-CG solve for ``batch`` (zero-padded to ``slots``
+        columns so the jit key is batch-size independent).  Returns
+        ``(x, rr, res)`` where ``rr`` is the per-column TRUE relative
+        residual of the ORIGINAL system — the certification signal —
+        regardless of Jacobi scaling."""
         import repro
         n = self.op.shape[0]
         dt = np.dtype(self.op.dtype)
@@ -195,33 +222,120 @@ class SolveEngine:
         if self._scale is None:
             res = repro.solve(self.op, jnp.asarray(bmat),
                               method="block_cg", maxiter=self.maxiter,
-                              tol=self.tol)
+                              tol=self.tol, fallback="off")
             x = np.asarray(res.x)
         else:
             res = repro.solve(self._scaled_apply,
                               jnp.asarray(self._scale[:, None] * bmat),
                               method="block_cg", maxiter=self.maxiter,
-                              tol=self.tol)
+                              tol=self.tol, fallback="off")
             x = np.asarray(self._scale[:, None] * np.asarray(res.x))
-        if self._scale is None:
-            rr = np.asarray(res.residual)
-        else:
-            # res.residual belongs to the SCALED system; report the true
-            # relative residual of the original one so the two engine
-            # configurations stay comparable
+        with np.errstate(invalid="ignore", over="ignore"):
             ax = np.asarray(self.op.matmat(jnp.asarray(x)))
-            rr = np.linalg.norm(bmat - ax, axis=0) \
+            r = bmat - ax
+            rr = np.linalg.norm(r, axis=0) \
                 / np.maximum(np.linalg.norm(bmat, axis=0), 1e-30)
+            if self._scale is None:
+                rr_cert = rr
+            else:
+                # certify in the basis the solver targeted tol in (the
+                # scaled system); rr stays original-basis for reporting.
+                # s*(b - A x) == b' - A' x', so no second matmat needed.
+                sc = self._scale[:, None]
+                rr_cert = np.linalg.norm(sc * r, axis=0) \
+                    / np.maximum(np.linalg.norm(sc * bmat, axis=0), 1e-30)
+        return x, rr, rr_cert, res
+
+    def _solve_group(self, batch: List[SolveRequest]) -> None:
+        """Solve a group, certify each column, bisect on failure.
+
+        A single poisoned column corrupts the whole block-CG recurrence
+        (the Gram matrix couples the columns), so certification failure
+        says "someone in this group is bad", not who.  Splitting the
+        group in half and re-solving isolates the culprit in
+        O(log slots) extra solves while every healthy request still
+        gets a certified answer."""
+        try:
+            x, rr, rr_cert, res = self._dispatch(batch)
+        except Exception as e:                       # infrastructure failure
+            if len(batch) == 1:
+                req = batch[0]
+                req.status = "error"
+                req.diagnostics["error"] = f"{type(e).__name__}: {e}"
+                req.done = True
+                return
+            mid = (len(batch) + 1) // 2
+            self._solve_group(batch[:mid])
+            self._solve_group(batch[mid:])
+            return
+        retry: List[SolveRequest] = []
         for j, req in enumerate(batch):
-            req.x = x[: len(req.b), j]
-            req.iters = int(res.iters)
-            req.residual = float(rr[j])
+            rn = float(rr_cert[j])
+            if np.isfinite(rn) and rn <= self._cert_tol:
+                req.x = x[: len(req.b), j]
+                req.iters = int(res.iters)
+                req.residual = float(rr[j])
+                req.status = "converged"
+                req.done = True
+            elif len(batch) == 1:
+                # isolated and still failing: this request is the poison
+                req.x = x[: len(req.b), j]
+                req.iters = int(res.iters)
+                req.residual = float(rr[j])
+                req.status = "non_finite" if not np.isfinite(rn) \
+                    else res.status
+                if req.status == "converged":   # recurrence lied; rn didn't
+                    req.status = "diverged"
+                req.diagnostics["true_residual"] = rn
+                req.diagnostics.update(
+                    {k: v for k, v in res.diagnostics.items()
+                     if k not in req.diagnostics})
+                req.done = True
+            else:
+                retry.append(req)
+        if retry:
+            if len(retry) == 1:
+                self._solve_group(retry)
+            else:
+                mid = (len(retry) + 1) // 2
+                self._solve_group(retry[:mid])
+                self._solve_group(retry[mid:])
+
+    def _admit(self, req: SolveRequest) -> bool:
+        """Reject a request whose RHS would poison the batch: wrong
+        shape, too long for the operator, or non-finite entries."""
+        b = np.asarray(req.b)
+        reason = None
+        if b.ndim != 1:
+            reason = f"b must be 1-D, got shape {b.shape}"
+        elif len(b) > self.op.shape[0]:
+            reason = (f"b has {len(b)} rows, operator has "
+                      f"{self.op.shape[0]}")
+        elif not np.all(np.isfinite(b)):
+            reason = "b contains non-finite values"
+        if reason is not None:
+            req.status = "rejected"
+            req.diagnostics["reason"] = reason
             req.done = True
+            return False
+        return True
 
     def run(self, requests: List[SolveRequest]) -> List[SolveRequest]:
+        import time
+        t0 = time.monotonic()
         queue = list(requests)
         while queue:
-            batch = [queue.pop(0)
-                     for _ in range(min(self.slots, len(queue)))]
-            self._solve_batch(batch)
+            batch: List[SolveRequest] = []
+            while queue and len(batch) < self.slots:
+                req = queue.pop(0)
+                if req.deadline_s is not None \
+                        and time.monotonic() - t0 >= req.deadline_s:
+                    req.status = "shed"
+                    req.diagnostics["deadline_s"] = req.deadline_s
+                    req.done = True
+                    continue
+                if self._admit(req):
+                    batch.append(req)
+            if batch:
+                self._solve_group(batch)
         return requests

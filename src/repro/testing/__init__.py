@@ -1,0 +1,9 @@
+"""Test-support utilities: the fault-injection harness.
+
+``repro.testing.faults`` holds the chaos toolbox behind
+``tests/test_robustness.py`` — context managers that inject the
+failure modes DESIGN.md §11 claims the solve pipeline survives.
+"""
+from repro.testing import faults
+
+__all__ = ["faults"]

@@ -1,0 +1,242 @@
+"""Fault-injection harness: controlled chaos for the solve pipeline.
+
+Each context manager injects ONE failure mode from the DESIGN.md §11
+taxonomy and restores clean state on exit, so a chaos test reads as
+
+    with faults.poison_values(m, count=3):
+        res = repro.solve(m, b, fallback="off")
+    assert res.status == "non_finite"
+
+Injection points and their caveats:
+
+* **Values** (:func:`poison_values`) mutate the HOST matrix in place —
+  the fault reaches the device only through builds that happen inside
+  the ``with`` block.  Operators built before the block stay clean.
+* **Tune cache** (:func:`corrupt_tune_cache`) mangles the JSON file on
+  disk in a chosen ``mode``; the loader/quarantine layer must degrade
+  to a re-measurement, never crash.
+* **Solve paths** (:func:`fail_strategy`, :func:`fail_kernel_backend`)
+  monkeypatch ``repro.api._one_solve`` so selected ladder rungs raise
+  — the way a bad kernel launch or an XLA lowering bug would surface.
+  These are patch-at-call-time faults and need no rebuild.
+* **Halo exchange** (:func:`drop_halo`, :func:`garble_halo`) patch the
+  ``dist_spmv`` exchange primitives.  jax traces capture the patched
+  function, so the distributed matvec must be TRACED inside the block
+  (build the operator / first call inside ``with``); closures traced
+  earlier keep their healthy exchange.  ``garble_halo`` corrupts the
+  received buffer as a function of the iterate — per-call-INCONSISTENT
+  on purpose: a consistently wrong exchange is just a different linear
+  operator, which a Krylov solve happily "solves" and certifies.  An
+  x-dependent corruption breaks linearity, which the breakdown /
+  stagnation detectors and the certification arbiter can actually see.
+  ``drop_halo`` (zeroed halo) IS a consistent wrong operator — tests
+  using it must certify out-of-band against the clean matrix.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import pathlib
+
+import numpy as np
+
+__all__ = [
+    "poison_values",
+    "corrupt_tune_cache",
+    "fail_strategy",
+    "fail_kernel_backend",
+    "drop_halo",
+    "garble_halo",
+    "InjectedFault",
+]
+
+
+class InjectedFault(RuntimeError):
+    """Raised by the forced-failure patches; lets tests distinguish the
+    injected fault from a genuine one."""
+
+
+# --------------------------------------------------------------------------
+# Data faults
+# --------------------------------------------------------------------------
+@contextlib.contextmanager
+def poison_values(m, *, count: int = 1, value: float = float("nan"),
+                  seed: int = 0):
+    """Overwrite ``count`` stored values of host CSR ``m`` with
+    ``value`` (NaN by default), restoring them on exit."""
+    from repro.kernels import ops as K
+    data = np.asarray(m.data)
+    if data.size == 0:
+        raise ValueError("cannot poison a matrix with no stored values")
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(data.size, size=min(count, data.size), replace=False)
+    saved = data[idx].copy()
+    data[idx] = value
+    # the device-build cache keys on the host object's id — an in-place
+    # mutation aliases stale builds both ways (clean build hiding the
+    # poison on entry, poisoned build surviving the restore on exit)
+    K.clear_device_cache()
+    try:
+        yield m
+    finally:
+        data[idx] = saved
+        K.clear_device_cache()
+
+
+# --------------------------------------------------------------------------
+# Tune-cache faults
+# --------------------------------------------------------------------------
+def _rewrite_records(path: pathlib.Path, fn):
+    payload = json.loads(path.read_text())
+    entries = payload.get("entries", {})
+    payload["entries"] = {k: fn(v) for k, v in entries.items()}
+    path.write_text(json.dumps(payload))
+
+
+@contextlib.contextmanager
+def corrupt_tune_cache(path, mode: str = "truncate"):
+    """Mangle the tune-cache file at ``path``; original bytes restored
+    on exit.  ``mode``:
+
+    * ``"truncate"`` — cut the file mid-JSON (crashed writer).
+    * ``"garbage"``  — replace with non-JSON bytes.
+    * ``"bad_schema"`` — stamp every record ``schema: 999`` (written
+      by a future version).
+    * ``"missing_keys"`` — strip every record down to its stamp
+      (hand-edited into uselessness).
+    """
+    p = pathlib.Path(path)
+    orig = p.read_bytes() if p.exists() else None
+    if mode == "truncate":
+        if orig is None:
+            raise FileNotFoundError(p)
+        p.write_bytes(orig[: max(1, len(orig) // 2)])
+    elif mode == "garbage":
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_bytes(b"\x00not json at all{{{")
+    elif mode == "bad_schema":
+        _rewrite_records(p, lambda rec: {**rec, "schema": 999}
+                         if isinstance(rec, dict) else rec)
+    elif mode == "missing_keys":
+        _rewrite_records(p, lambda rec: {"schema": rec.get("schema")}
+                         if isinstance(rec, dict) else rec)
+    else:
+        raise ValueError(f"unknown corrupt_tune_cache mode {mode!r}")
+    try:
+        yield p
+    finally:
+        if orig is None:
+            p.unlink(missing_ok=True)
+        else:
+            p.write_bytes(orig)
+
+
+# --------------------------------------------------------------------------
+# Solve-path faults
+# --------------------------------------------------------------------------
+@contextlib.contextmanager
+def fail_strategy(*strategies: str):
+    """Make ``api._one_solve`` raise :class:`InjectedFault` for the
+    given strategies (``"fused"``, ``"composed"``) — a ladder rung that
+    dies the way a broken lowering does."""
+    from repro import api
+    orig = api._one_solve
+
+    def patched(op, b, *, strategy, **kw):
+        if strategy in strategies:
+            raise InjectedFault(f"injected {strategy} failure")
+        return orig(op, b, strategy=strategy, **kw)
+
+    api._one_solve = patched
+    try:
+        yield
+    finally:
+        api._one_solve = orig
+
+
+@contextlib.contextmanager
+def fail_kernel_backend():
+    """Make ``api._one_solve`` raise :class:`InjectedFault` whenever the
+    operator resolves to the Pallas kernel backend — simulates a kernel
+    launch failure; only the ``kernel->ref`` rung (and beyond) can
+    succeed."""
+    from repro import api
+    from repro.kernels import ops as K
+    orig = api._one_solve
+
+    def patched(op, b, **kw):
+        backend = getattr(op, "backend", None)
+        if backend is not None and K.resolve_backend(backend) == "kernel":
+            raise InjectedFault("injected kernel-launch failure")
+        return orig(op, b, **kw)
+
+    api._one_solve = patched
+    try:
+        yield
+    finally:
+        api._one_solve = orig
+
+
+# --------------------------------------------------------------------------
+# Halo-exchange faults (distributed operator)
+# --------------------------------------------------------------------------
+@contextlib.contextmanager
+def drop_halo():
+    """Zero the received halo buffer — a silently wrong but CONSISTENT
+    linear operator (a lost message every call).  In-band certification
+    cannot see this (it certifies through the same broken operator);
+    tests must check against the clean matrix out-of-band."""
+    from repro.core import dist_spmv as D
+    of, og = D._exchange_halo_full, D._exchange_halo_gathered
+
+    def full(x_blk, axis, n_dev, halo_w):
+        return jnp_zeros_like(of(x_blk, axis, n_dev, halo_w))
+
+    def gathered(x_blk, *a, **kw):
+        return jnp_zeros_like(og(x_blk, *a, **kw))
+
+    def jnp_zeros_like(ext):
+        import jax.numpy as jnp
+        return jnp.zeros_like(ext)
+
+    D._exchange_halo_full = full
+    D._exchange_halo = full
+    D._exchange_halo_gathered = gathered
+    try:
+        yield
+    finally:
+        D._exchange_halo_full = of
+        D._exchange_halo = of
+        D._exchange_halo_gathered = og
+
+
+@contextlib.contextmanager
+def garble_halo(scale: float = 1.0):
+    """Corrupt the received halo with an iterate-dependent term —
+    per-call-inconsistent, so the effective operator is NOT linear and
+    the solver's breakdown/divergence detectors (or the certification
+    arbiter) catch it instead of converging to a wrong answer."""
+    from repro.core import dist_spmv as D
+    import jax.numpy as jnp
+    of, og = D._exchange_halo_full, D._exchange_halo_gathered
+
+    def _garble(ext, x_blk):
+        # nonlinear in x: breaks the Krylov invariants every iteration
+        noise = jnp.tanh(jnp.sum(x_blk.astype(jnp.float32)) * 7.0) + 0.5
+        return ext + scale * noise * jnp.sign(ext)
+
+    def full(x_blk, axis, n_dev, halo_w):
+        return _garble(of(x_blk, axis, n_dev, halo_w), x_blk)
+
+    def gathered(x_blk, *a, **kw):
+        return _garble(og(x_blk, *a, **kw), x_blk)
+
+    D._exchange_halo_full = full
+    D._exchange_halo = full
+    D._exchange_halo_gathered = gathered
+    try:
+        yield
+    finally:
+        D._exchange_halo_full = of
+        D._exchange_halo = of
+        D._exchange_halo_gathered = og

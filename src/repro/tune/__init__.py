@@ -19,7 +19,8 @@ from .space import (Candidate, enumerate_candidates, heuristic_candidate,
 from .measure import (measure_candidate, measure_solver_candidate,
                       prepare_candidate, ab_compare,
                       median_seconds, device_kind, measurement_backend)
-from .cache import TuneCache, default_cache, cache_key, dtype_policy
+from .cache import (TuneCache, default_cache, cache_key,
+                    dtype_policy, RECORD_SCHEMA)
 from .calibrate import (fit_calibration, model_error,
                         rows_from_bench_kernels, fit_from_bench_kernels)
 from .autotune import (TuneResult, TunePartition, SolverTuneResult,
@@ -38,6 +39,7 @@ __all__ = [
     "device_kind",
     "measurement_backend",
     "TuneCache",
+    "RECORD_SCHEMA",
     "default_cache",
     "cache_key",
     "dtype_policy",

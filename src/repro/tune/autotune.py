@@ -91,11 +91,15 @@ def autotune(
                       C.dtype_policy(dtype, index_dtype),
                       extra=f"fmt={format}" if format != "auto" else "")
     if not force:
-        hit = cache.get(key)
+        hit = cache.get(key, require=("best",))
         if hit is not None:
-            return TuneResult(best=Candidate.from_dict(hit["best"]),
-                              rows=list(hit.get("rows", [])),
-                              cached=True, key=key)
+            try:
+                return TuneResult(best=Candidate.from_dict(hit["best"]),
+                                  rows=list(hit.get("rows", [])),
+                                  cached=True, key=key)
+            except (AttributeError, KeyError, TypeError, ValueError):
+                cache.quarantined[key] = "malformed 'best' candidate"
+
 
     heur = heuristic_candidate(m, format, dtype, index_dtype)
     cands = prune_candidates(
@@ -177,12 +181,16 @@ def tune_solver(
                       C.dtype_policy(dtype, index_dtype),
                       extra=f"solver:method={method}")
     if not force:
-        hit = cache.get(key)
+        hit = cache.get(key, require=("strategy", "layout"))
         if hit is not None:
-            return SolverTuneResult(
-                strategy=str(hit["strategy"]),
-                layout=Candidate.from_dict(hit["layout"]),
-                rows=list(hit.get("rows", [])), cached=True, key=key)
+            try:
+                return SolverTuneResult(
+                    strategy=str(hit["strategy"]),
+                    layout=Candidate.from_dict(hit["layout"]),
+                    rows=list(hit.get("rows", [])), cached=True, key=key)
+            except (AttributeError, KeyError, TypeError, ValueError):
+                cache.quarantined[key] = "malformed 'layout' candidate"
+
 
     if measure_fn is None:
         measure_fn = ME.measure_solver_candidate
@@ -270,12 +278,16 @@ def tune_partition(
                f":da={diag_align}"
                f":cl={','.join(map(str, chunk_l_options))}"))
     if not force:
-        hit = cache.get(key)
+        hit = cache.get(key, require=("chunk_l", "rem_chunk_l"))
         if hit is not None:
-            return TunePartition(chunk_l=int(hit["chunk_l"]),
-                                 rem_chunk_l=int(hit["rem_chunk_l"]),
-                                 rows=list(hit.get("rows", [])),
-                                 cached=True, key=key)
+            try:
+                return TunePartition(chunk_l=int(hit["chunk_l"]),
+                                     rem_chunk_l=int(hit["rem_chunk_l"]),
+                                     rows=list(hit.get("rows", [])),
+                                     cached=True, key=key)
+            except (TypeError, ValueError):
+                cache.quarantined[key] = "malformed chunk_l record"
+
 
     n_pad = D.padded_global_size(m.n_rows, n_dev, b_r)
     n_loc = n_pad // n_dev

@@ -21,6 +21,14 @@ The cache file location is ``$REPRO_TUNE_CACHE`` when set, else
 ``~/.cache/repro-spmv/tune_cache.json``.  A corrupt or
 schema-mismatched file is treated as empty, never an error — losing a
 tuning cache costs a re-measurement, not correctness.
+
+Individual RECORDS are versioned too: ``put`` stamps each with
+``"schema": RECORD_SCHEMA`` and ``get`` QUARANTINES (returns a miss
+for, without crashing or deleting) records whose stamp is unknown or
+which lack the caller's ``require``d keys — a cache written by a newer
+version, or hand-edited into garbage, degrades to a re-measurement
+instead of a KeyError deep in the autotuner.  Quarantined keys are
+listed in ``cache.quarantined`` for inspection.
 """
 from __future__ import annotations
 
@@ -34,6 +42,7 @@ import numpy as np
 
 __all__ = [
     "SCHEMA_VERSION",
+    "RECORD_SCHEMA",
     "TuneCache",
     "default_cache",
     "cache_key",
@@ -41,6 +50,7 @@ __all__ = [
 ]
 
 SCHEMA_VERSION = 1
+RECORD_SCHEMA = 1
 _ENV_VAR = "REPRO_TUNE_CACHE"
 
 
@@ -77,6 +87,7 @@ class TuneCache:
         self.path = pathlib.Path(path) if path is not None \
             else _default_path()
         self._entries: Optional[dict] = None
+        self.quarantined: dict = {}    # key -> reason, see module doc
 
     def _load(self) -> dict:
         if self._entries is None:
@@ -89,12 +100,32 @@ class TuneCache:
                 pass
         return self._entries
 
-    def get(self, key: str) -> Optional[dict]:
-        return self._load().get(key)
+    def get(self, key: str, require: tuple = ()) -> Optional[dict]:
+        """Look ``key`` up; a malformed record — not a dict, an unknown
+        ``schema`` stamp, or missing any of the ``require``d keys — is
+        QUARANTINED: reported as a miss (the caller re-measures and
+        overwrites it) but neither crashed on nor silently reused."""
+        rec = self._load().get(key)
+        if rec is None:
+            return None
+        reason = None
+        if not isinstance(rec, dict):
+            reason = f"record is {type(rec).__name__}, not a dict"
+        elif rec.get("schema") != RECORD_SCHEMA:
+            reason = f"unknown record schema {rec.get('schema')!r}"
+        else:
+            missing = [k for k in require if k not in rec]
+            if missing:
+                reason = f"missing keys {missing}"
+        if reason is not None:
+            self.quarantined[key] = reason
+            return None
+        return rec
 
     def put(self, key: str, record: dict) -> None:
         entries = self._load()
-        entries[key] = record
+        entries[key] = {**record, "schema": RECORD_SCHEMA}
+        self.quarantined.pop(key, None)
         self._flush()
 
     def clear(self) -> None:

@@ -1,0 +1,310 @@
+"""Chaos suite: every fault the harness can inject must end in a typed
+status, a successful fallback rung, or an out-of-band-detectable
+mismatch — never a silent wrong answer (DESIGN.md §11).
+
+Faults come from ``repro.testing.faults``; the single-device tests run
+in-process, the halo-exchange tests in an 8-virtual-device subprocess
+like the rest of the ``dist`` mark.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import repro
+from repro import api
+from repro.core import formats as F, matrices as M
+from repro.core.operator import operator
+from repro.kernels import ops as K
+from repro.testing import faults
+
+
+def _spd(rng, n=64):
+    m = M.poisson_2d(8, 8)
+    b = rng.standard_normal(m.n_rows).astype(np.float32)
+    return m, b
+
+
+# --------------------------------------------------------- value poison
+def test_poisoned_values_fail_typed_not_silent(rng):
+    m, b = _spd(rng)
+    with faults.poison_values(m, count=3):
+        res = repro.solve(m, b, tune="off", fallback="off")
+        assert res.status == "non_finite"
+        assert not bool(res.converged)
+        with pytest.raises(repro.SolveFailure) as ei:
+            repro.solve(m, b, tune="off", fallback="auto")
+    # every rung saw the poison and said so — no rung claimed success
+    assert ei.value.ladder
+    assert all(e.get("status") in ("non_finite", "breakdown", "diverged")
+               or "error" in e for e in ei.value.ladder)
+    # harness restored the matrix: the same solve now succeeds
+    res = repro.solve(m, b, tune="off")
+    assert res.status == "converged"
+    assert res.diagnostics["certified"]
+
+
+def test_poison_restores_values(rng):
+    m, _ = _spd(rng)
+    before = np.asarray(m.data).copy()
+    with faults.poison_values(m, count=5, value=np.inf):
+        assert not np.all(np.isfinite(m.data))
+    np.testing.assert_array_equal(np.asarray(m.data), before)
+
+
+# --------------------------------------------------------- validation
+def test_validate_check_raises_on_poison(rng):
+    m, b = _spd(rng)
+    with faults.poison_values(m, count=2):
+        with pytest.raises(F.CSRValidationError) as ei:
+            repro.solve(m, b, tune="off", validate="check")
+    assert "non_finite_values" in ei.value.report.issues
+
+
+def test_validate_repair_drops_poison_and_solves(rng):
+    m, b = _spd(rng)
+    with faults.poison_values(m, count=2):
+        # dropping poisoned entries breaks the Poisson matrix's symmetry
+        # — CG may legitimately break down on it, but it must do so
+        # TYPED, and never leak a NaN
+        res = repro.solve(m, b, tune="off", validate="repair",
+                          fallback="off")
+        assert res.status in ("converged", "maxiter", "breakdown",
+                              "diverged")
+        assert np.all(np.isfinite(np.asarray(res.x)))
+        # bicgstab handles the now-nonsymmetric repaired operator
+        res = repro.solve(m, b, method="bicgstab", tune="off",
+                          validate="repair")
+    assert res.status == "converged"
+    assert res.diagnostics["certified"]
+
+
+def test_as_device_validate_wiring(rng):
+    m, _ = _spd(rng)
+    with faults.poison_values(m, count=1):
+        with pytest.raises(F.CSRValidationError):
+            K.as_device(m, validate="check")
+        dev = K.as_device(m, validate="repair")
+        y = np.asarray(dev.matvec(jnp.ones(m.n_rows, jnp.float32)))
+        assert np.all(np.isfinite(y))
+    with pytest.raises(ValueError):
+        K.as_device(m, validate="sometimes")
+
+
+# --------------------------------------------------------- tune cache
+@pytest.mark.parametrize("mode", ["truncate", "garbage", "bad_schema",
+                                  "missing_keys"])
+def test_corrupt_tune_cache_degrades_to_remeasure(mode, tmp_path,
+                                                  monkeypatch, rng):
+    from repro import tune as T
+    from repro.tune import cache as TC
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "tc.json"))
+    m, b = _spd(rng)
+    r0 = repro.solve(m, b, tune="auto")
+    assert r0.status == "converged"
+    cache_path = T.default_cache().path
+    assert cache_path.exists()
+
+    def fresh_process():
+        # corruption lands on disk; the process that SEES it is the next
+        # one to load the file — simulate it by dropping the singleton
+        monkeypatch.setattr(TC, "_DEFAULT", None)
+
+    with faults.corrupt_tune_cache(cache_path, mode=mode):
+        if mode in ("bad_schema", "missing_keys"):
+            # a fresh loader quarantines every mangled record
+            fresh = TC.TuneCache(cache_path)
+            for key in json.loads(cache_path.read_text())["entries"]:
+                assert fresh.get(key, require=("strategy",)) is None
+            assert fresh.quarantined
+        fresh_process()
+        # never crashes; mangled records degrade to a re-measure (which
+        # overwrites the record and clears its quarantine)
+        res = repro.solve(m, b, tune="auto")
+        assert res.status == "converged"
+        assert not res.info["tune"]["cached"]
+    # file restored: the original entry is a hit again
+    fresh_process()
+    res = repro.solve(m, b, tune="auto")
+    assert res.info["tune"]["cached"]
+
+
+# --------------------------------------------------------- forced rungs
+def test_fused_failure_falls_through_to_composed(rng):
+    m, b = _spd(rng)
+    with faults.fail_strategy("fused"):
+        res = repro.solve(m, b, tune="off", fallback="auto")
+    assert res.status == "converged"
+    ladder = res.info["ladder"]
+    assert "error" in ladder[0] and "injected" in ladder[0]["error"]
+    assert ladder[-1]["rung"] == "fused->composed"
+    assert res.diagnostics["certified"]
+
+
+def test_fused_failure_with_fallback_off_raises_original(rng):
+    m, b = _spd(rng)
+    with faults.fail_strategy("fused"):
+        with pytest.raises(faults.InjectedFault):
+            repro.solve(m, b, tune="off", fallback="off")
+
+
+def test_kernel_failure_falls_through_to_ref(rng):
+    m, b = _spd(rng)
+    with faults.fail_kernel_backend():
+        res = repro.solve(m, b, tune="off", backend="kernel",
+                          fallback="auto")
+    assert res.status == "converged"
+    rungs = [e["rung"] for e in res.info["ladder"]]
+    assert rungs[-1] in ("kernel->ref", "escalate:fresh-x0+jacobi")
+    assert any("injected" in e.get("error", "")
+               for e in res.info["ladder"][:-1])
+
+
+def test_all_rungs_fail_raises_solve_failure(rng):
+    m, b = _spd(rng)
+    with faults.fail_strategy("fused", "composed"):
+        with pytest.raises(repro.SolveFailure) as ei:
+            repro.solve(m, b, tune="off", fallback="auto")
+    assert all("injected" in e["error"] for e in ei.value.ladder)
+
+
+# --------------------------------------------------------- serve engine
+def _engine_setup(rng, **kw):
+    from repro.serve.engine import SolveEngine, SolveRequest
+    m = M.poisson_2d(12, 12)
+    op = operator(m, b_r=32)
+    reqs = [SolveRequest(rid=i, b=rng.standard_normal(m.n_rows)
+                         .astype(np.float32)) for i in range(4)]
+    return SolveEngine(op, slots=4, maxiter=1200, tol=1e-6, **kw), reqs, m
+
+
+def test_engine_rejects_nonfinite_rhs(rng):
+    eng, reqs, _ = _engine_setup(rng)
+    reqs[2].b = reqs[2].b.copy()
+    reqs[2].b[5] = np.nan
+    eng.run(reqs)
+    assert reqs[2].status == "rejected"
+    assert "non-finite" in reqs[2].diagnostics["reason"]
+    assert all(r.status == "converged" for r in reqs if r.rid != 2)
+
+
+def test_engine_bisects_poisoned_batch(rng):
+    """One poisoned column past admission NaNs the whole block-CG Gram;
+    bisection must isolate it — the three healthy requests succeed with
+    certified answers, only the poisoned one fails, typed."""
+    eng, reqs, m = _engine_setup(rng)
+    eng._admit = lambda req: True          # let the poison through
+    reqs[1].b = reqs[1].b.copy()
+    reqs[1].b[3] = np.nan
+    eng.run(reqs)
+    assert reqs[1].done and reqs[1].status in ("non_finite", "breakdown",
+                                               "diverged")
+    a = F.csr_to_dense(m).astype(np.float64)
+    for r in reqs:
+        if r.rid == 1:
+            continue
+        assert r.status == "converged"
+        err = np.linalg.norm(a @ r.x - r.b) / np.linalg.norm(r.b)
+        assert err < 1e-4
+
+
+def test_engine_sheds_expired_deadlines(rng):
+    eng, reqs, _ = _engine_setup(rng)
+    reqs[0].deadline_s = 0.0               # already expired at run()
+    eng.run(reqs)
+    assert reqs[0].status == "shed" and reqs[0].x is None
+    assert reqs[0].diagnostics["deadline_s"] == 0.0
+    assert all(r.status == "converged" for r in reqs[1:])
+
+
+def test_engine_infrastructure_error_is_typed(rng, monkeypatch):
+    eng, reqs, _ = _engine_setup(rng)
+    monkeypatch.setattr(
+        eng, "_dispatch",
+        lambda batch: (_ for _ in ()).throw(RuntimeError("boom")))
+    eng.run(reqs[:1])
+    assert reqs[0].status == "error"
+    assert "boom" in reqs[0].diagnostics["error"]
+
+
+# --------------------------------------------------------- halo chaos
+_DIST_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    import repro
+    from repro.core import formats as F, matrices as M, dist_spmv as D
+    from repro.core.operator import dist_operator
+    from repro.launch.mesh import make_host_mesh
+    from repro.testing import faults
+
+    mesh = make_host_mesh(8)
+    m = M.poisson_2d(16, 16)
+    rng = np.random.default_rng(0)
+    dense = F.csr_to_dense(m).astype(np.float64)
+    out = {}
+
+    def padded_b(dist):
+        b = np.zeros(dist.n_global_pad, np.float32)
+        b[:m.n_rows] = rng.standard_normal(m.n_rows)
+        bj = jax.device_put(jnp.asarray(b),
+                            jax.NamedSharding(mesh, P("data")))
+        return b, bj
+
+    # garble: iterate-dependent corruption breaks linearity -> the
+    # detectors or the certification arbiter must catch it in-band
+    with faults.garble_halo(scale=1.0):
+        op = dist_operator(m, mesh, b_r=32)   # traced under the fault
+        b, bj = padded_b(op.dist)
+        try:
+            res = repro.solve(op, bj, tune="off", fallback="off",
+                              maxiter=400)
+            out["garble_status"] = res.status
+        except Exception as e:
+            out["garble_status"] = f"raise:{type(e).__name__}"
+
+    # drop: a consistent wrong operator -- in-band certification is
+    # blind to it by construction; out-of-band truth must catch it
+    with faults.drop_halo():
+        op = dist_operator(m, mesh, b_r=32)
+        b, bj = padded_b(op.dist)
+        res = repro.solve(op, bj, tune="off", fallback="off", maxiter=400)
+        x = np.asarray(res.x, np.float64)[:m.n_rows]
+        out["drop_true_rel"] = float(
+            np.linalg.norm(dense @ x - b[:m.n_rows])
+            / np.linalg.norm(b[:m.n_rows]))
+        out["drop_status"] = res.status
+
+    # harness restored the exchange: clean dist solve certifies
+    op = dist_operator(m, mesh, b_r=32)
+    b, bj = padded_b(op.dist)
+    res = repro.solve(op, bj, tune="off", fallback="off", maxiter=2000)
+    out["clean_status"] = res.status
+    print(json.dumps(out))
+""")
+
+
+@pytest.mark.dist
+def test_halo_faults_detected():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _DIST_SCRIPT],
+                       capture_output=True, text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    # garbled exchange: typed failure, never a converged claim
+    assert out["garble_status"] != "converged"
+    # dropped halo: the solve's own operator can't see it (documented
+    # detection boundary) -- ground truth must show a large residual
+    assert out["drop_true_rel"] > 1e-2
+    # and the harness restored the healthy exchange afterwards
+    assert out["clean_status"] == "converged"

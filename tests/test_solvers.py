@@ -285,3 +285,218 @@ def test_solve_distributed_parity(dist_solve_results, method):
     assert out[f"{method}_true"] < 1e-5
     assert out[f"{method}_true_refined"] < 1e-5
     assert out[f"{method}_rounds"] >= 1
+
+
+# --------------------------------------------------------------------------
+# Failure taxonomy: breakdown detection and the NaN-masking regression
+# --------------------------------------------------------------------------
+def _csr_op(a):
+    return operator(F.csr_from_dense(np.asarray(a, np.float32)), b_r=32)
+
+
+def _singular(rng, n=24):
+    """Rank-deficient PSD: B B^T with a thin B — random b is outside the
+    range, so the Krylov recurrence must break down, not converge."""
+    bm = rng.standard_normal((n, n // 2))
+    return bm @ bm.T
+
+
+def _indefinite(rng, n=24):
+    a = rng.standard_normal((n, n))
+    a = (a + a.T) / 2
+    np.fill_diagonal(a, np.linspace(-2.0, 2.0, n))   # eigenvalues both signs
+    return a
+
+
+def _skew(rng, n=24):
+    a = rng.standard_normal((n, n))
+    return a - a.T                                    # x^T A x == 0 for all x
+
+
+def test_nan_residual_is_not_converged_composed(rng):
+    """Regression: a NaN residual must flag non_finite, never satisfy
+    the convergence predicate (NaN > tol*tol is False — the old
+    ``_not_done`` read that as done)."""
+    n = 24
+    a = np.eye(n)
+    a[3, 3] = np.nan
+    op = _csr_op(a)
+    b = rng.standard_normal(n).astype(np.float32)
+    res = S.cg(op, b, maxiter=50, tol=1e-6)
+    assert res.status == "non_finite"
+    assert not bool(res.converged)
+    res = S.bicgstab(op, b, maxiter=50, tol=1e-6)
+    assert res.status == "non_finite"
+    assert not bool(res.converged)
+
+
+def test_nan_residual_is_not_converged_fused(rng):
+    m = M.poisson_2d(6, 6)
+    data = np.asarray(m.data)
+    saved = data[0]
+    data[0] = np.nan
+    try:
+        ops.clear_device_cache()
+        res = api.solve(m, rng.standard_normal(m.n_rows).astype(np.float32),
+                        tune="off", fallback="off")
+    finally:
+        data[0] = saved
+        ops.clear_device_cache()
+    assert res.info["strategy"] == "fused"
+    assert res.status == "non_finite"
+    assert not bool(res.converged)
+
+
+def test_probe_contract_ignores_failure_detection(rng):
+    """tol <= 0 is the tuner/bench fixed-length probe: it must run to
+    exactly maxiter with no breakdown/divergence exits."""
+    op = _csr_op(_indefinite(rng))
+    b = rng.standard_normal(24).astype(np.float32)
+    res = S.cg(op, b, maxiter=37, tol=0.0)
+    assert int(res.iters) == 37
+    assert res.status == "maxiter"
+
+
+@pytest.mark.parametrize("mk,expected", [
+    (_singular, ("breakdown", "diverged")),
+    (_indefinite, ("breakdown", "diverged")),
+    (_skew, ("breakdown",)),
+])
+def test_cg_breakdown_taxonomy(mk, expected, rng):
+    a = mk(rng)
+    op = _csr_op(a)
+    b = rng.standard_normal(a.shape[0]).astype(np.float32)
+    res = S.cg(op, b, maxiter=500, tol=1e-8)
+    assert res.status in expected, res.status
+    assert not bool(res.converged)
+    assert np.all(np.isfinite(np.asarray(res.x)))
+
+
+@pytest.mark.parametrize("mk", [_singular, _skew])
+def test_bicgstab_breakdown_taxonomy(mk, rng):
+    a = mk(rng)
+    op = _csr_op(a)
+    b = rng.standard_normal(a.shape[0]).astype(np.float32)
+    res = S.bicgstab(op, b, maxiter=500, tol=1e-8)
+    # typed, never a false converged claim
+    assert res.status in ("breakdown", "diverged", "non_finite", "maxiter")
+    if res.status == "maxiter":
+        assert float(res.residual) > 1e-8
+
+
+@pytest.mark.parametrize("mk", [_singular, _indefinite, _skew])
+def test_block_cg_breakdown_taxonomy(mk, rng):
+    a = mk(rng)
+    op = _csr_op(a)
+    b = rng.standard_normal((a.shape[0], 3)).astype(np.float32)
+    res = S.block_cg(op, b, maxiter=500, tol=1e-8)
+    assert res.status in ("breakdown", "diverged", "non_finite")
+    assert not bool(res.converged)
+    assert np.all(np.isfinite(np.asarray(res.x)))
+
+
+def test_breakdown_statuses_survive_solve_front_door(rng):
+    """repro.solve with the ladder: an indefinite system fails every
+    rung and surfaces a typed SolveFailure whose ladder names them."""
+    a = _indefinite(rng)
+    m = F.csr_from_dense(np.asarray(a, np.float32))
+    b = rng.standard_normal(a.shape[0]).astype(np.float32)
+    with pytest.raises(repro.SolveFailure) as ei:
+        repro.solve(m, b, tune="off", maxiter=500)
+    assert all(e.get("status") in ("breakdown", "diverged", "non_finite")
+               for e in ei.value.ladder)
+
+
+_DIST_BREAKDOWN_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    import repro
+    from repro.core import formats as F
+    from repro.core.operator import dist_operator
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(8)
+    rng = np.random.default_rng(0)
+    n = 96
+    bm = rng.standard_normal((n, n // 2))
+    m = F.csr_from_dense((bm @ bm.T).astype(np.float32))
+    op = dist_operator(m, mesh, b_r=8)
+    b = np.zeros(op.dist.n_global_pad, np.float32)
+    b[:n] = rng.standard_normal(n)
+    bj = jax.device_put(jnp.asarray(b), jax.NamedSharding(mesh, P("data")))
+    res = repro.solve(op, bj, maxiter=500, tol=1e-8, tune="off",
+                      fallback="off")
+    print(json.dumps({"status": res.status,
+                      "converged": bool(res.converged)}))
+""")
+
+
+@pytest.mark.dist
+def test_breakdown_detected_on_dist_operator():
+    """The same breakdown taxonomy holds through the mesh-distributed
+    operator (singular PSD system, rows padded and sharded)."""
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _DIST_BREAKDOWN_SCRIPT],
+                       capture_output=True, text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["status"] in ("breakdown", "diverged")
+    assert not out["converged"]
+
+
+# ---------------------------------------------------------------------------
+# Refinement divergence guard: a stalled or poisoned refinement is a
+# typed failure the ladder escalates off, not max_rounds of nothing
+# ---------------------------------------------------------------------------
+def test_refinement_guard_reason_codes():
+    b = jnp.ones(8, jnp.float32)
+    residual_of = lambda x: b - x           # A = I
+
+    x, rn, rounds, reason = S.iterative_refinement(
+        residual_of, lambda r: (r, 1, 0.0), b)
+    assert reason == "converged" and rn <= 1e-6
+
+    # a zero correction leaves the residual exactly where it was: one
+    # wasted round, then the guard calls it, not max_rounds of them
+    x, rn, rounds, reason = S.iterative_refinement(
+        residual_of, lambda r: (jnp.zeros_like(r), 1, 1.0), b)
+    assert reason == "stalled" and len(rounds) == 1
+
+    x, rn, rounds, reason = S.iterative_refinement(
+        residual_of, lambda r: (jnp.full_like(r, jnp.nan), 1, 1.0), b)
+    assert reason == "non_finite"
+
+
+def test_refined_stall_is_typed_and_escalates_to_f32(rng, monkeypatch):
+    import repro
+    m = M.poisson_2d(8, 8)
+    b = rng.standard_normal(m.n_rows).astype(np.float32)
+    orig = S.iterative_refinement
+
+    def stalling(residual_of, inner, b_, **kw):
+        # the inner solve never improves anything — the way a matrix
+        # too ill-conditioned for bf16 values surfaces
+        return orig(residual_of,
+                    lambda r: (jnp.zeros_like(r), 1, 1.0), b_, **kw)
+
+    monkeypatch.setattr(S, "iterative_refinement", stalling)
+
+    res = repro.solve(m, b, dtype="bfloat16", refine="auto", tune="off",
+                      fallback="off")
+    assert res.status == "diverged"
+    assert res.diagnostics["refine_reason"] == "stalled"
+
+    res = repro.solve(m, b, dtype="bfloat16", refine="auto", tune="off",
+                      fallback="auto")
+    assert res.status == "converged"
+    assert res.diagnostics["certified"]
+    entries = {e["rung"]: e.get("status") for e in res.info["ladder"]}
+    assert entries.get("bf16->f32") == "converged"
+    assert all(s == "diverged" for r, s in entries.items()
+               if r != "bf16->f32")

@@ -70,6 +70,60 @@ def test_cache_survives_reload_and_corruption(cache, tmp_path):
     assert broken.get(r1.key) is None
 
 
+def test_record_schema_quarantine_round_trip(cache):
+    """Individual-record versioning: unknown schema stamps, non-dict
+    records and missing required keys QUARANTINE (miss + reason, no
+    crash, no silent reuse) and a re-measure ``put`` heals the entry."""
+    _, m = _mat()
+    r1 = T.autotune(m, cache=cache, measure_fn=_model_measure([]))
+    rec = cache.get(r1.key, require=("best",))
+    assert rec is not None and rec["schema"] == T.RECORD_SCHEMA
+
+    # hand-mangle the file three ways; a fresh loader quarantines each
+    payload = json.loads(cache.path.read_text())
+    entries = payload["entries"]
+    good = entries[r1.key]
+    entries[r1.key] = {**good, "schema": 999}      # future version
+    entries["k_str"] = "not a dict"
+    entries["k_bare"] = {"schema": T.RECORD_SCHEMA}
+    cache.path.write_text(json.dumps(payload))
+
+    fresh = T.TuneCache(cache.path)
+    assert fresh.get(r1.key) is None
+    assert "schema" in fresh.quarantined[r1.key]
+    assert fresh.get("k_str") is None
+    assert "dict" in fresh.quarantined["k_str"]
+    assert fresh.get("k_bare", require=("best",)) is None
+    assert "missing" in fresh.quarantined["k_bare"]
+    assert fresh.get("k_bare") is not None         # stamp alone is valid
+
+    # the autotuner degrades to a re-measure, then the put heals it
+    calls = []
+    r2 = T.autotune(m, cache=fresh, measure_fn=_model_measure(calls))
+    assert not r2.cached and calls
+    assert r1.key not in fresh.quarantined
+    assert fresh.get(r1.key, require=("best",)) is not None
+
+
+def test_malformed_nested_record_quarantines(cache):
+    """A record with a valid stamp but garbage INSIDE the required key
+    (deserialization blows up) also degrades to a re-measure."""
+    _, m = _mat()
+    r1 = T.autotune(m, cache=cache, measure_fn=_model_measure([]))
+    payload = json.loads(cache.path.read_text())
+    payload["entries"][r1.key]["best"] = 42      # breaks from_dict
+    cache.path.write_text(json.dumps(payload))
+
+    fresh = T.TuneCache(cache.path)
+    calls = []
+    r2 = T.autotune(m, cache=fresh, measure_fn=_model_measure(calls))
+    assert not r2.cached and calls                 # degraded to re-measure
+    # ... and the re-measure's put healed the record in place
+    assert r1.key not in fresh.quarantined
+    healed = fresh.get(r1.key, require=("best",))
+    assert isinstance(healed["best"], dict)
+
+
 def test_cache_key_separates_policy_device_format():
     fp = "f" * 40
     keys = {
