@@ -1,0 +1,243 @@
+"""Multi-tenant solve serving under traffic -> BENCH_serve.json.
+
+Three studies against the serving subsystem (DESIGN.md §12):
+
+* **continuous batching vs sequential** — the SAME request set (several
+  tenants, several RHS each) served twice through identical machinery,
+  once with ``slots=1`` (every request its own certified solve — what a
+  caller who does not batch gets) and once with ``slots=SLOTS`` (the
+  scheduler coalesces concurrent requests into block-CG groups).  The
+  ratio is the request-queue-sourced spMM amortisation PR 2 measured at
+  the kernel level;
+* **registry warm-hit tuning cost** — admits run with an INJECTED
+  counting ``measure_fn``, so the zero-warmup contract is counted, not
+  assumed: cold admits measure, warm admits (fresh registry, same
+  persistent cache file) measure exactly zero, and a value swap on a
+  resident structure reconverts nothing;
+* **latency under Poisson arrivals** — open-loop arrivals across all
+  tenants at ~1.2x the measured batched capacity, p50/p99
+  queue/solve/total latency and batch occupancy from the scheduler's
+  own metrics.
+
+REGRESSION GUARDS (non-zero exit, CI serve-smoke job):
+
+* batched throughput >= MIN_BATCH_SPEEDUP x sequential at an offered
+  load of >= 4 concurrent tenants;
+* cold admits measure (> 0), warm admits measure EXACTLY zero;
+* every request in every study finalizes converged (no failed/error).
+"""
+from __future__ import annotations
+
+import pathlib
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import matrices as M
+from repro.serve import OperatorRegistry, SolveRequest, SolveScheduler
+from repro.tune.cache import TuneCache
+
+from .common import csv_row, seeded_rng, write_bench_json
+
+SLOTS = 4
+REQS_PER_TENANT = 6
+MIN_BATCH_SPEEDUP = 1.5
+N_ARRIVALS = 32                # Poisson-arrival latency study size
+MAXITER = 2000
+TOL = 1e-6
+
+# Four tenants, four distinct SPD structures (the offered-load floor
+# the throughput guard requires): three 5-point Laplacians at different
+# grids plus the paper's SAMG matrix at bench scale.
+_TENANTS = (
+    ("poisson20", lambda: M.poisson_2d(20, 20)),
+    ("poisson24", lambda: M.poisson_2d(24, 24)),
+    ("poisson28", lambda: M.poisson_2d(28, 28)),
+    ("samg", lambda: M.samg(scale=0.00025)),
+)
+
+
+def _registry(tenants, **kw):
+    reg = OperatorRegistry(capacity=len(tenants), tune=kw.pop("tune", "off"),
+                           **kw)
+    entries = {}
+    for name, mk in tenants:
+        entries[name] = reg.admit(mk())
+    return reg, entries
+
+
+def _request_set(entries, per_tenant):
+    rng = seeded_rng()
+    reqs = []
+    rid = 0
+    for name, e in entries.items():
+        for _ in range(per_tenant):
+            reqs.append((name, SolveRequest(
+                rid=rid, b=rng.standard_normal(e.shape[0])
+                .astype(np.float32), tenant=e.key)))
+            rid += 1
+    return reqs
+
+
+def _serve_all(sched, reqs):
+    t0 = time.perf_counter()
+    for _, r in reqs:
+        sched.submit(r)
+    sched.run_until_drained()
+    return time.perf_counter() - t0
+
+
+def _assert_all_converged(reqs, label):
+    bad = [(r.rid, r.status) for _, r in reqs if r.status != "converged"]
+    if bad:
+        raise SystemExit(f"REGRESSION: {label} left non-converged "
+                         f"requests: {bad[:8]}")
+
+
+def run(print_rows=True):
+    rows = []
+
+    # ---- study 1: registry admission cost, counted ----------------------
+    calls = {"n": 0}
+
+    def counting_measure(m, c, **kw):
+        calls["n"] += 1
+        # deterministic fake timing: the guard counts calls, it does not
+        # care which candidate wins
+        return 1e-3 + 1.0 / (c.b_r * c.chunk_l)
+
+    cache_path = pathlib.Path(
+        tempfile.mkdtemp(prefix="bench_serve_")) / "tune_cache.json"
+    reg_cold, _ = _registry(_TENANTS, tune="auto",
+                            cache=TuneCache(cache_path),
+                            measure_fn=counting_measure)
+    cold_measures = calls["n"]
+
+    calls["n"] = 0
+    reg_warm, warm_entries = _registry(_TENANTS, tune="auto",
+                                       cache=TuneCache(cache_path),
+                                       measure_fn=counting_measure)
+    warm_measures = calls["n"]
+    warm_cached = all(e.tune_info["cached"] for e in warm_entries.values())
+
+    # value swap on a resident structure: zero reconversion, zero tuning
+    import dataclasses
+    m0 = _TENANTS[0][1]()
+    m0b = dataclasses.replace(m0, data=(m0.data * 2.0).astype(m0.data.dtype))
+    calls["n"] = 0
+    e0 = reg_warm.admit(m0b)
+    swap_measures = calls["n"]
+
+    rows.append(dict(kind="registry", tenants=len(_TENANTS),
+                     cold_measures=cold_measures,
+                     warm_measures=warm_measures,
+                     warm_cached=warm_cached,
+                     swap_measures=swap_measures, swaps=e0.swaps))
+    if print_rows:
+        print(csv_row("serve_registry_cold", 0.0,
+                      f"measures={cold_measures}"))
+        print(csv_row("serve_registry_warm", 0.0,
+                      f"measures={warm_measures} cached={warm_cached}"))
+    if cold_measures <= 0:
+        raise SystemExit("REGRESSION: cold registry admission measured "
+                         "nothing — the tuning path is not running")
+    if warm_measures != 0 or not warm_cached:
+        raise SystemExit(
+            f"REGRESSION: warm registry admission measured "
+            f"{warm_measures} times (want 0, cached={warm_cached}) — the "
+            "fingerprint-shared tune cache is broken")
+    if swap_measures != 0 or e0.swaps != 1:
+        raise SystemExit(
+            f"REGRESSION: value swap on a resident structure measured "
+            f"{swap_measures}, swaps={e0.swaps} (want 0 measures, 1 swap)")
+
+    # ---- study 2: continuous batching vs sequential ----------------------
+    # Untimed warmup pass per configuration first: admission conversion
+    # and the block-CG jit compile (one key per slot count) must not
+    # land inside either side of the A/B.
+    timings = {}
+    for label, slots in (("sequential", 1), ("batched", SLOTS)):
+        reg, entries = _registry(_TENANTS, tune="off")
+        sched = SolveScheduler(reg, slots=slots, maxiter=MAXITER, tol=TOL)
+        warm = _request_set(entries, 1)
+        _serve_all(sched, warm)
+        _assert_all_converged(warm, f"{label} warmup")
+        reqs = _request_set(entries, REQS_PER_TENANT)
+        timings[label] = _serve_all(sched, reqs)
+        _assert_all_converged(reqs, label)
+        n = len(reqs)
+        thr = n / timings[label]
+        occ = sched.metrics.occupancy.snapshot()
+        rows.append(dict(kind="throughput", mode=label, slots=slots,
+                         requests=n, wall_s=timings[label],
+                         req_per_s=thr,
+                         batches=sched.metrics.counters["batches"],
+                         occupancy_mean=occ.get("mean_s")))
+        if print_rows:
+            print(csv_row(f"serve_throughput_{label}",
+                          timings[label] / n * 1e6,
+                          f"{thr:.1f} req/s slots={slots}"))
+
+    speedup = timings["sequential"] / timings["batched"]
+    rows.append(dict(kind="throughput_ratio", speedup=speedup,
+                     guard=MIN_BATCH_SPEEDUP))
+    if print_rows:
+        print(csv_row("serve_batching_speedup", 0.0, f"{speedup:.2f}x"))
+    if speedup < MIN_BATCH_SPEEDUP:
+        raise SystemExit(
+            f"REGRESSION: continuous batching {speedup:.2f}x sequential "
+            f"(want >= {MIN_BATCH_SPEEDUP}x) — coalescing is not "
+            "amortising the matrix stream")
+
+    # ---- study 3: p50/p99 under Poisson arrivals -------------------------
+    # Open-loop offered load at ~1.2x measured batched capacity: the
+    # queue builds, continuous batching drains it in full groups, and
+    # the p99 shows the backlog price while p50 stays near one solve.
+    rng = seeded_rng(1)
+    reg, entries = _registry(_TENANTS, tune="off")
+    sched = SolveScheduler(reg, slots=SLOTS, maxiter=MAXITER, tol=TOL)
+    warm = _request_set(entries, 1)
+    _serve_all(sched, warm)
+
+    cap = len(_TENANTS) * REQS_PER_TENANT / timings["batched"]
+    inter = 1.0 / (1.2 * cap)
+    arrivals = np.cumsum(rng.exponential(inter, N_ARRIVALS))
+    names = list(entries)
+    sched_reqs = []
+    for i, t_a in enumerate(arrivals):
+        name = names[int(rng.integers(len(names)))]
+        e = entries[name]
+        sched_reqs.append((float(t_a), SolveRequest(
+            rid=1000 + i, b=rng.standard_normal(e.shape[0])
+            .astype(np.float32), tenant=e.key)))
+
+    i, t0 = 0, time.monotonic()
+    while i < len(sched_reqs) or sched.pending():
+        now = time.monotonic() - t0
+        while i < len(sched_reqs) and sched_reqs[i][0] <= now:
+            sched.submit(sched_reqs[i][1])
+            i += 1
+        if sched.pending():
+            sched.tick()
+        elif i < len(sched_reqs):
+            time.sleep(min(5e-3, sched_reqs[i][0] - now))
+    wall = time.monotonic() - t0
+    _assert_all_converged([("", r) for _, r in sched_reqs], "poisson")
+
+    snap = sched.metrics.snapshot()
+    rows.append(dict(kind="poisson_latency", arrivals=N_ARRIVALS,
+                     offered_per_s=1.0 / inter, wall_s=wall,
+                     queue_s=snap["queue_s"], solve_s=snap["solve_s"],
+                     total_s=snap["total_s"],
+                     occupancy=snap["occupancy"],
+                     counters=snap["counters"]))
+    if print_rows:
+        print(csv_row("serve_poisson_p50", snap["total_s"]["p50_s"] * 1e6,
+                      f"p99={snap['total_s']['p99_s'] * 1e3:.1f}ms "
+                      f"occ={snap['occupancy']['mean_s']:.2f}"))
+
+    path = write_bench_json("serve", rows)
+    if print_rows:
+        print(csv_row("serve_json", 0.0, path))
+    return rows

@@ -16,13 +16,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table1,fig3,eq,scaling,kernels,sell,"
-                         "ops,dist,tune,solve")
+                         "ops,dist,tune,solve,serve")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     from . import (bench_formats, bench_histograms, bench_perf_model,
                    bench_scaling, bench_kernels, bench_sell, bench_sparse_ffn,
-                   bench_ops, bench_dist, bench_tune, bench_solve)
+                   bench_ops, bench_dist, bench_tune, bench_solve,
+                   bench_serve)
     suites = [
         ("table1", bench_formats.run),      # paper Table 1
         ("fig3", bench_histograms.run),     # paper Fig. 3
@@ -35,6 +36,7 @@ def main() -> None:
         ("dist", bench_dist.run),           # gathered vs full halo, spMM
         ("tune", bench_tune.run),           # autotuner vs heuristic + calib
         ("solve", bench_solve.run),         # fused solver iterations
+        ("serve", bench_serve.run),         # multi-tenant solve serving
     ]
     if only:
         unknown = only - {name for name, _ in suites}

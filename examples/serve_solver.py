@@ -1,0 +1,68 @@
+"""Multi-tenant solve serving: registry + continuous-batching scheduler.
+
+Three tenants admit their SPD systems into one OperatorRegistry (each
+resident operator keyed by structural fingerprint; a second admit of
+the same structure with new coefficients swaps values WITHOUT
+reconverting).  A SolveScheduler coalesces everyone's right-hand sides
+into certified block-CG groups, sheds requests whose deadline expired
+in queue, and keeps per-request latency in its metrics ledger.
+
+    PYTHONPATH=src python examples/serve_solver.py
+"""
+import dataclasses
+
+import numpy as np
+
+from repro.core import matrices as M
+from repro.serve import OperatorRegistry, SolveRequest, SolveScheduler
+
+
+def main():
+    rng = np.random.default_rng(0)
+    registry = OperatorRegistry(capacity=4, tune="off")
+    tenants = {
+        "heat": registry.admit(M.poisson_2d(16, 16)),
+        "mesh": registry.admit(M.samg(scale=0.0005)),
+        "grid": registry.admit(M.poisson_2d(20, 20)),
+    }
+    sched = SolveScheduler(registry, slots=4, maxiter=2000, tol=1e-6)
+
+    # a burst of traffic: four RHS per tenant, one with a deadline that
+    # has no hope (shed at tick time, never dispatched)
+    reqs = []
+    for name, entry in tenants.items():
+        for k in range(4):
+            reqs.append(SolveRequest(
+                rid=len(reqs),
+                b=rng.standard_normal(entry.shape[0]).astype(np.float32),
+                tenant=entry.key,
+                deadline_s=0.0 if (name == "mesh" and k == 3) else None))
+    for r in reqs:
+        sched.submit(r)
+    sched.run_until_drained()
+
+    for r in reqs:
+        serve = r.diagnostics.get("serve", {})
+        print(f"req {r.rid:2d} tenant={serve.get('tenant', '?')[:8]} "
+              f"status={r.status:9s} batch_k={serve.get('batch_k', '-')}")
+
+    # same structure, new coefficients: zero-reconversion value swap
+    heat = M.poisson_2d(16, 16)
+    heat2 = dataclasses.replace(
+        heat, data=(heat.data * 2.0).astype(heat.data.dtype))
+    entry = registry.admit(heat2)
+    print(f"value swap on resident structure: swaps={entry.swaps} "
+          f"version={entry.version} (no reconversion, no re-tune)")
+
+    snap = sched.metrics.snapshot()
+    print(f"batches={snap['counters']['batches']} "
+          f"converged={snap['counters']['converged']} "
+          f"shed={snap['counters']['shed']} "
+          f"occupancy_mean={snap['occupancy']['mean_s']:.2f} "
+          f"p50_total={snap['total_s']['p50_s'] * 1e3:.1f}ms")
+    assert snap["counters"]["converged"] == len(reqs) - 1
+    assert snap["counters"]["shed"] == 1
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Multi-tenant solve serving (DESIGN.md §12).
+
+Layered registry -> scheduler -> group solver:
+
+* :class:`OperatorRegistry` (``registry.py``) — resident operators
+  keyed by structural fingerprint, sharing the persistent tune cache
+  (warm admits measure nothing) with zero-reconversion value swaps and
+  LRU eviction;
+* :class:`SolveScheduler` (``scheduler.py``) — async admission,
+  continuous RHS batching into certified block-CG groups, deadline
+  shedding, tick-based slot recycling;
+* :class:`ServeMetrics` (``metrics.py``) — latency/occupancy summaries
+  and typed counters;
+* :class:`SolveEngine` / :class:`Engine` (``engine.py``) — the
+  single-operator compatibility shim and the LM decode engine.
+"""
+from .metrics import LatencySummary, ServeMetrics
+from .registry import OperatorRegistry, RegistryMismatch, ResidentOperator
+from .scheduler import GroupSolver, SolveRequest, SolveScheduler
+from .engine import Engine, Request, SolveEngine
+
+__all__ = [
+    "Engine", "Request", "SolveEngine", "SolveRequest",
+    "OperatorRegistry", "RegistryMismatch", "ResidentOperator",
+    "GroupSolver", "SolveScheduler",
+    "ServeMetrics", "LatencySummary",
+]

@@ -1,5 +1,4 @@
-"""Batched serving engines: continuous batching over prefill + decode,
-and batched linear solves over a shared :class:`SparseOperator`.
+"""Serving engines: LM continuous batching, and the solve-serving shim.
 
 :class:`Engine` is a minimal production-shape LM engine: requests queue
 up, get prefill'd into free cache slots, and every engine tick runs one
@@ -8,19 +7,21 @@ or max tokens) free their slot for the next queued request — continuous
 batching as in vLLM, scaled to the shapes this box can run.  Param
 trees may contain ``SparseLinear`` operator leaves (``repro.sparse``) —
 they are registered pytrees, so the jitted decode step carries them
-like any dense weight.
+like any dense weight.  The decode path is the one the decode_32k /
+long_500k dry-run cells lower; here it runs for real on reduced
+configs (examples/serve_lm.py).
 
-:class:`SolveEngine` is the same serving idea applied to the paper's
-actual workload: many independent right-hand sides against ONE resident
-sparse matrix.  Requests queue up, get batched ``slots`` at a time into
-a multi-RHS block-CG solve (``repro.solve(..., method="block_cg")``
-over the operator's ``matmat``), so the matrix is streamed from memory
-once per iteration for the whole batch — the spMM amortisation the
-SELL-C-sigma follow-up identifies — and the SAME code serves a
-single-device operator or a mesh-distributed one (DESIGN.md §8).
-
-The decode path is the one the decode_32k / long_500k dry-run cells
-lower; here it runs for real on reduced configs (examples/serve_lm.py).
+Linear-solve serving lives in the multi-tenant subsystem next door
+(DESIGN.md §12): :mod:`repro.serve.registry` keys resident operators by
+structural fingerprint (shared persistent tune cache, zero-warmup warm
+admits, zero-reconversion value swaps), :mod:`repro.serve.scheduler`
+coalesces concurrent requests into certified block-CG groups with
+deadline shedding and tick-based slot recycling, and
+:mod:`repro.serve.metrics` keeps the ledger.  :class:`SolveEngine`
+survives as a thin single-operator COMPATIBILITY SHIM over that path —
+same constructor, same blocking ``run(requests)``, same typed request
+statuses — for callers who have one operator in hand and no interest
+in tenancy.  New code should drive the registry + scheduler directly.
 """
 from __future__ import annotations
 
@@ -30,6 +31,10 @@ from typing import Callable, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .scheduler import SolveRequest  # re-export: the shim's request type
+
+__all__ = ["Engine", "Request", "SolveEngine", "SolveRequest"]
 
 
 @dataclasses.dataclass
@@ -141,41 +146,23 @@ class Engine:
 # --------------------------------------------------------------------------
 # Linear-solve serving over the operator protocol
 # --------------------------------------------------------------------------
-@dataclasses.dataclass
-class SolveRequest:
-    rid: int
-    b: np.ndarray                # (n,) right-hand side, original basis
-    deadline_s: Optional[float] = None   # seconds from run() start; None = no deadline
-    x: Optional[np.ndarray] = None
-    iters: int = 0
-    residual: float = float("inf")
-    status: str = "pending"      # converged/maxiter/breakdown/diverged/
-    #                              non_finite/rejected/shed/error
-    diagnostics: dict = dataclasses.field(default_factory=dict)
-    done: bool = False
-
-
 class SolveEngine:
-    """Batched linear-solve serving against one resident SparseOperator.
+    """Single-operator compatibility shim over the serving subsystem.
 
-    ``op`` is any square :class:`repro.core.operator.SparseOperator`
-    (``operator(m)`` or ``dist_operator(m, mesh)`` — the engine code is
-    identical for both).  Queued right-hand sides are packed ``slots``
-    columns at a time (zero-padded when the queue runs short; a zero
-    column converges instantly) and solved with one multi-RHS block-CG,
-    so every CG iteration streams the matrix once for the whole batch.
-    SPD systems only — the block-CG contract.
+    ``SolveEngine(op).run(requests)`` behaves exactly as it did before
+    the multi-tenant split: queued right-hand sides are packed ``slots``
+    columns at a time into certified multi-RHS block-CG groups (SPD
+    systems only — the block-CG contract), with admission checks,
+    deadline shedding (``deadline_s`` measured from ``run()`` start) and
+    poisoned-batch bisection.  Internally it is one resident operator in
+    an :class:`~repro.serve.registry.OperatorRegistry` driven by a
+    :class:`~repro.serve.scheduler.SolveScheduler`; the scheduler's
+    metrics are exposed as ``engine.metrics`` and per-request summaries
+    land in ``request.diagnostics["serve"]``.
 
-    Hardening (DESIGN.md §11): right-hand sides are admission-checked
-    (non-finite or wrong-shape ``b`` is ``rejected`` before it can
-    poison a batch), requests carry optional per-request deadlines
-    (expired requests are ``shed`` before dispatch, never solved), and
-    every batch is CERTIFIED per column against the original system.
-    When certification fails for some columns — one poisoned RHS NaNs
-    the shared block-CG Gram matrix, taking every column down with it —
-    the engine bisects the group, re-solves the halves, and keeps
-    splitting until healthy requests succeed and only the genuinely
-    poisoned request fails, with a typed ``status`` + diagnostics.
+    The ``_dispatch`` / ``_admit`` methods remain the fault-injection
+    seams the chaos suite targets — they route into the underlying
+    :class:`~repro.serve.scheduler.GroupSolver`.
     """
 
     def __init__(self, op, *, slots: int = 4, maxiter: int = 2000,
@@ -183,159 +170,38 @@ class SolveEngine:
                  cert_slack: float = 10.0):
         if op.shape[0] != op.shape[1]:
             raise ValueError("SolveEngine serves square systems")
+        from .registry import OperatorRegistry
+        from .scheduler import SolveScheduler
+
         self.op = op
         self.slots = slots
         self.maxiter = maxiter
         self.tol = tol
-        # tol stops the recurrence; certification accepts within
-        # cert_slack * tol.  The slack absorbs recurrence-vs-true
-        # drift near the storage dtype's accuracy floor (f32 at
-        # tol=1e-7 lands a hair above tol) — a poisoned column sits
-        # at NaN or O(1), orders of magnitude past any sane slack.
-        self._cert_tol = tol * cert_slack
-        # Jacobi scaling as a per-column pre/post transform keeps the
-        # block solver untouched: solve (D^-1/2 A D^-1/2) x' = D^-1/2 b.
-        # The scaled-apply closure is built ONCE — it is the block
-        # solver's static jit key, so a fresh one per batch would
-        # recompile every batch.
-        self._scale = None
-        self._scaled_apply = None
-        if jacobi_precond:
-            d = np.asarray(op.diagonal())
-            self._scale = np.where(d > 0, 1.0 / np.sqrt(np.abs(d) + 1e-30),
-                                   1.0).astype(d.dtype)
-            s = jnp.asarray(self._scale)[:, None]
-            self._scaled_apply = lambda X: s * op.matmat(s * X)
+        self.registry = OperatorRegistry(capacity=1)
+        self.entry = self.registry.admit_operator(op)
+        self.scheduler = SolveScheduler(
+            self.registry, slots=slots, maxiter=maxiter, tol=tol,
+            jacobi_precond=jacobi_precond, cert_slack=cert_slack)
+        solver = self.scheduler.solver_for(self.entry)
+        # late-bound hooks: a monkeypatched engine._dispatch/_admit is
+        # picked up because the lambdas resolve the attribute per call
+        solver._dispatch_fn = lambda batch: self._dispatch(batch)
+        solver._admit_fn = lambda req: self._admit(req)
+        self._solver = solver
+
+    @property
+    def metrics(self):
+        return self.scheduler.metrics
 
     def _dispatch(self, batch: List[SolveRequest]):
-        """One block-CG solve for ``batch`` (zero-padded to ``slots``
-        columns so the jit key is batch-size independent).  Returns
-        ``(x, rr, res)`` where ``rr`` is the per-column TRUE relative
-        residual of the ORIGINAL system — the certification signal —
-        regardless of Jacobi scaling."""
-        import repro
-        n = self.op.shape[0]
-        dt = np.dtype(self.op.dtype)
-        bmat = np.zeros((n, self.slots), dtype=dt)
-        for j, req in enumerate(batch):
-            bmat[: len(req.b), j] = req.b
-        if self._scale is None:
-            res = repro.solve(self.op, jnp.asarray(bmat),
-                              method="block_cg", maxiter=self.maxiter,
-                              tol=self.tol, fallback="off")
-            x = np.asarray(res.x)
-        else:
-            res = repro.solve(self._scaled_apply,
-                              jnp.asarray(self._scale[:, None] * bmat),
-                              method="block_cg", maxiter=self.maxiter,
-                              tol=self.tol, fallback="off")
-            x = np.asarray(self._scale[:, None] * np.asarray(res.x))
-        with np.errstate(invalid="ignore", over="ignore"):
-            ax = np.asarray(self.op.matmat(jnp.asarray(x)))
-            r = bmat - ax
-            rr = np.linalg.norm(r, axis=0) \
-                / np.maximum(np.linalg.norm(bmat, axis=0), 1e-30)
-            if self._scale is None:
-                rr_cert = rr
-            else:
-                # certify in the basis the solver targeted tol in (the
-                # scaled system); rr stays original-basis for reporting.
-                # s*(b - A x) == b' - A' x', so no second matmat needed.
-                sc = self._scale[:, None]
-                rr_cert = np.linalg.norm(sc * r, axis=0) \
-                    / np.maximum(np.linalg.norm(sc * bmat, axis=0), 1e-30)
-        return x, rr, rr_cert, res
-
-    def _solve_group(self, batch: List[SolveRequest]) -> None:
-        """Solve a group, certify each column, bisect on failure.
-
-        A single poisoned column corrupts the whole block-CG recurrence
-        (the Gram matrix couples the columns), so certification failure
-        says "someone in this group is bad", not who.  Splitting the
-        group in half and re-solving isolates the culprit in
-        O(log slots) extra solves while every healthy request still
-        gets a certified answer."""
-        try:
-            x, rr, rr_cert, res = self._dispatch(batch)
-        except Exception as e:                       # infrastructure failure
-            if len(batch) == 1:
-                req = batch[0]
-                req.status = "error"
-                req.diagnostics["error"] = f"{type(e).__name__}: {e}"
-                req.done = True
-                return
-            mid = (len(batch) + 1) // 2
-            self._solve_group(batch[:mid])
-            self._solve_group(batch[mid:])
-            return
-        retry: List[SolveRequest] = []
-        for j, req in enumerate(batch):
-            rn = float(rr_cert[j])
-            if np.isfinite(rn) and rn <= self._cert_tol:
-                req.x = x[: len(req.b), j]
-                req.iters = int(res.iters)
-                req.residual = float(rr[j])
-                req.status = "converged"
-                req.done = True
-            elif len(batch) == 1:
-                # isolated and still failing: this request is the poison
-                req.x = x[: len(req.b), j]
-                req.iters = int(res.iters)
-                req.residual = float(rr[j])
-                req.status = "non_finite" if not np.isfinite(rn) \
-                    else res.status
-                if req.status == "converged":   # recurrence lied; rn didn't
-                    req.status = "diverged"
-                req.diagnostics["true_residual"] = rn
-                req.diagnostics.update(
-                    {k: v for k, v in res.diagnostics.items()
-                     if k not in req.diagnostics})
-                req.done = True
-            else:
-                retry.append(req)
-        if retry:
-            if len(retry) == 1:
-                self._solve_group(retry)
-            else:
-                mid = (len(retry) + 1) // 2
-                self._solve_group(retry[:mid])
-                self._solve_group(retry[mid:])
+        return self._solver.dispatch_impl(batch)
 
     def _admit(self, req: SolveRequest) -> bool:
-        """Reject a request whose RHS would poison the batch: wrong
-        shape, too long for the operator, or non-finite entries."""
-        b = np.asarray(req.b)
-        reason = None
-        if b.ndim != 1:
-            reason = f"b must be 1-D, got shape {b.shape}"
-        elif len(b) > self.op.shape[0]:
-            reason = (f"b has {len(b)} rows, operator has "
-                      f"{self.op.shape[0]}")
-        elif not np.all(np.isfinite(b)):
-            reason = "b contains non-finite values"
-        if reason is not None:
-            req.status = "rejected"
-            req.diagnostics["reason"] = reason
-            req.done = True
-            return False
-        return True
+        return self._solver.admit_impl(req)
 
     def run(self, requests: List[SolveRequest]) -> List[SolveRequest]:
-        import time
-        t0 = time.monotonic()
-        queue = list(requests)
-        while queue:
-            batch: List[SolveRequest] = []
-            while queue and len(batch) < self.slots:
-                req = queue.pop(0)
-                if req.deadline_s is not None \
-                        and time.monotonic() - t0 >= req.deadline_s:
-                    req.status = "shed"
-                    req.diagnostics["deadline_s"] = req.deadline_s
-                    req.done = True
-                    continue
-                if self._admit(req):
-                    batch.append(req)
-            if batch:
-                self._solve_group(batch)
+        """Submit ``requests`` and block until all are finalized."""
+        for req in requests:
+            self.scheduler.submit(req)
+        self.scheduler.run_until_drained()
         return requests

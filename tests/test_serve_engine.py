@@ -95,3 +95,27 @@ def test_solve_engine_jacobi_scaling(rng):
     assert r1.iters * 5 < r0.iters
     err = np.linalg.norm(a.astype(np.float64) @ r1.x - b) / np.linalg.norm(b)
     assert err < 1e-3
+
+
+def test_solve_engine_is_a_shim_over_the_scheduler(rng):
+    """PR 8: SolveEngine routes through the registry + scheduler path —
+    requests carry the serving diagnostics and the scheduler's metrics
+    ledger is exposed, while the blocking run() contract is unchanged."""
+    from repro.core import matrices as M
+    from repro.core.operator import operator
+    from repro.serve.engine import SolveEngine, SolveRequest
+    from repro.serve.scheduler import SolveScheduler
+
+    m = M.poisson_2d(10, 10)
+    eng = SolveEngine(operator(m, b_r=32), slots=4, maxiter=1500, tol=1e-6)
+    assert isinstance(eng.scheduler, SolveScheduler)
+    assert len(eng.registry) == 1
+
+    reqs = [SolveRequest(rid=i, b=rng.standard_normal(m.n_rows)
+                         .astype(np.float32)) for i in range(5)]
+    eng.run(reqs)
+    assert all(r.status == "converged" for r in reqs)
+    assert eng.metrics.counters["batches"] == 2          # 4 + 1
+    assert eng.metrics.counters["converged"] == 5
+    assert reqs[0].diagnostics["serve"]["batch_k"] == 4
+    assert reqs[4].diagnostics["serve"]["batch_k"] == 1

@@ -1,0 +1,168 @@
+"""Operator registry: fingerprint-keyed admission, shared tune cache,
+zero-reconversion value swaps, LRU bounds, collision safety."""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import formats as F
+from repro.core import matrices as M
+from repro.serve import OperatorRegistry, RegistryMismatch
+from repro.tune.cache import TuneCache
+
+
+def _counting_measure():
+    calls = {"n": 0}
+
+    def fake(m, c, **kw):
+        calls["n"] += 1
+        return 1e-3 + 1.0 / (c.b_r * c.chunk_l)
+
+    return calls, fake
+
+
+def test_cold_admit_measures_warm_admit_does_not(tmp_path):
+    """The zero-warmup contract: a structure tuned ONCE (by any
+    registry sharing the persistent cache) admits everywhere else with
+    zero tuning measurements — the fingerprint key is shared between
+    the registry and the tune cache by construction."""
+    calls, fake = _counting_measure()
+    cache = TuneCache(tmp_path / "tune.json")
+    reg = OperatorRegistry(tune="auto", cache=cache, measure_fn=fake)
+    e = reg.admit(M.poisson_2d(10, 10))
+    assert calls["n"] > 0
+    assert e.tune_info["cached"] is False
+
+    # a NEW registry + NEW cache object over the SAME file: still zero
+    calls["n"] = 0
+    reg2 = OperatorRegistry(tune="auto",
+                            cache=TuneCache(tmp_path / "tune.json"),
+                            measure_fn=fake)
+    e2 = reg2.admit(M.poisson_2d(10, 10))
+    assert calls["n"] == 0
+    assert e2.tune_info["cached"] is True
+    assert e2.key == e.key
+
+
+def test_warm_admit_same_values_is_pure_lookup():
+    reg = OperatorRegistry(tune="off")
+    m = M.poisson_2d(8, 8)
+    e = reg.admit(m)
+    op_before = e.op
+    e2 = reg.admit(M.poisson_2d(8, 8))      # fresh object, equal bytes
+    assert e2 is e
+    assert e2.op is op_before               # no rebuild, no swap
+    assert e2.hits == 1 and e2.swaps == 0
+
+
+def test_value_swap_is_zero_reconversion(rng):
+    """New coefficients on a resident structure swap through the value
+    map: the operator's answers update, its STRUCTURE leaves are the
+    very same arrays (no format reconversion happened), and tuned
+    statics survive because the fingerprint did not change."""
+    reg = OperatorRegistry(tune="off")
+    m = M.poisson_2d(10, 10)
+    e = reg.admit(m)
+    inner_before = e.op.dev.dev
+
+    m2 = dataclasses.replace(
+        m, data=(m.data * rng.uniform(1.5, 2.5)).astype(m.data.dtype))
+    assert F.structural_fingerprint(m2) == e.key
+    e2 = reg.admit(m2)
+    assert e2 is e and e.swaps == 1 and e.version == 1
+
+    # structure leaves are SHARED BY IDENTITY with the pre-swap operand
+    inner_after = e.op.dev.dev
+    val_fields = ("val", "data")
+    shared = 0
+    for f in dataclasses.fields(inner_after):
+        if f.name in val_fields:
+            continue
+        a, b = getattr(inner_after, f.name), getattr(inner_before, f.name)
+        if hasattr(a, "shape"):
+            assert a is b, f"structure leaf {f.name} was rebuilt"
+            shared += 1
+    assert shared >= 1
+
+    # and the swapped operator computes with the NEW values
+    x = rng.standard_normal(m.shape[1]).astype(np.float32)
+    y = np.asarray(e.op @ jnp.asarray(x))
+    np.testing.assert_allclose(y, m2.matvec(x), rtol=1e-5, atol=1e-5)
+
+
+def test_value_swap_solves_to_new_answers(rng):
+    import repro
+    reg = OperatorRegistry(tune="off")
+    m = M.poisson_2d(8, 8)
+    e = reg.admit(m)
+    b = rng.standard_normal(m.n_rows).astype(np.float32)
+    x1 = np.asarray(repro.solve(e.op, jnp.asarray(b), tune="off").x)
+
+    m2 = dataclasses.replace(m, data=(m.data * 3.0).astype(m.data.dtype))
+    reg.admit(m2)
+    x2 = np.asarray(repro.solve(e.op, jnp.asarray(b), tune="off").x)
+    np.testing.assert_allclose(x2, x1 / 3.0, rtol=1e-4, atol=1e-5)
+
+
+def test_lru_eviction_bounds_residency():
+    reg = OperatorRegistry(capacity=2, tune="off")
+    e1 = reg.admit(M.poisson_2d(6, 6))
+    e2 = reg.admit(M.poisson_2d(7, 7))
+    reg.get(e1.key)                          # touch: e1 most-recent
+    e3 = reg.admit(M.poisson_2d(8, 8))      # evicts e2 (LRU), not e1
+    assert len(reg) == 2 and reg.evictions == 1
+    assert e1.key in reg and e3.key in reg and e2.key not in reg
+    # evicted structures may re-admit (fresh entry)
+    e2b = reg.admit(M.poisson_2d(7, 7))
+    assert e2b.key == e2.key and e2b is not e2
+
+
+def test_fingerprint_hit_with_mismatched_dtype_policy_rejected():
+    reg = OperatorRegistry(tune="off")
+    m = M.poisson_2d(8, 8)
+    reg.admit(m)                             # native policy
+    with pytest.raises(RegistryMismatch, match="dtype"):
+        reg.admit(M.poisson_2d(8, 8), dtype=jnp.bfloat16)
+    # the resident entry is untouched
+    assert reg.get(F.structural_fingerprint(m)).policy == "native+auto"
+
+
+def test_fingerprint_hit_with_mismatched_shape_rejected():
+    """A sha1 collision cannot be manufactured, so tamper with the
+    resident entry's recorded contract: the guard must refuse to serve
+    a structure whose shape/nnz contradicts the hit."""
+    reg = OperatorRegistry(tune="off")
+    m = M.poisson_2d(8, 8)
+    e = reg.admit(m)
+    e.shape = (3, 3)
+    with pytest.raises(RegistryMismatch, match="structure"):
+        reg.admit(M.poisson_2d(8, 8))
+    e.shape = tuple(m.shape)
+    e.nnz = 1
+    with pytest.raises(RegistryMismatch, match="structure"):
+        reg.admit(M.poisson_2d(8, 8))
+
+
+def test_opaque_entry_cannot_serve_host_admissions():
+    from repro.core.operator import operator
+    reg = OperatorRegistry(tune="off")
+    m = M.poisson_2d(8, 8)
+    reg.admit_operator(operator(m, b_r=32), key=F.structural_fingerprint(m))
+    with pytest.raises(RegistryMismatch):
+        reg.admit(m)
+
+
+def test_admit_rejects_non_host_inputs():
+    from repro.core.operator import operator
+    reg = OperatorRegistry(tune="off")
+    with pytest.raises(TypeError, match="admit_operator"):
+        reg.admit(operator(M.poisson_2d(6, 6), b_r=32))
+
+
+def test_stats_shape():
+    reg = OperatorRegistry(capacity=2, tune="off")
+    reg.admit(M.poisson_2d(6, 6))
+    st = reg.stats()
+    assert st["resident"] == 1 and st["capacity"] == 2
+    assert st["entries"][0]["nnz"] == M.poisson_2d(6, 6).nnz
