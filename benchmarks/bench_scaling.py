@@ -8,7 +8,13 @@ caveats) the MODE-vs-MODE and scaling TRENDS are the comparable
 quantities.  Alongside, the paper's performance model predicts the
 strong-scaling curve for the TPU v5e target out to 32 chips: T(P) =
 max(T_mvm/P, T_halo) for task mode, sum for vector mode (paper §3.1:
-"the possible performance benefit can be at most a factor of two")."""
+"the possible performance benefit can be at most a factor of two").
+
+:func:`scaling_curves` additionally measures strong AND weak
+parallel-efficiency curves across comm configs — bulk-synchronous
+full-slice 1-D, gathered/overlap 1-D, and the 2-D grid — whose rows
+``bench_dist`` folds into ``BENCH_dist.json`` (the scaling-trajectory
+CI artifact)."""
 from __future__ import annotations
 
 import json
@@ -69,6 +75,118 @@ def _measured():
         raise RuntimeError(r.stderr[-2000:])
     line = [l for l in r.stdout.splitlines() if l.startswith("RESULTS ")][-1]
     return json.loads(line[len("RESULTS "):])
+
+
+_CURVES_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, time
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core import formats as F, dist_spmv as D
+    from repro.core.operator import dist_operator
+    from repro.launch.mesh import make_host_mesh
+
+    rng = np.random.default_rng(0)
+
+    def banded(n, reach, stride=8):
+        a = np.zeros((n, n), np.float32)
+        i = np.arange(n)
+        a[i, i] = 4.0
+        a[i[:-1], i[:-1] + 1] = -1.0
+        a[i[1:], i[1:] - 1] = -1.0
+        far = i[::stride]
+        for sgn in (+1, -1):
+            tgt = far + sgn * reach
+            ok = (tgt >= 0) & (tgt < n)
+            a[far[ok], tgt[ok]] = -0.5
+        return F.csr_from_dense(a)
+
+    def timed(fn, arg, warmup=3, iters=10):
+        for _ in range(warmup):
+            jax.block_until_ready(fn(arg))
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(arg))
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+    def square_grid(p):
+        g = max(d for d in range(1, int(np.sqrt(p)) + 1) if p % d == 0)
+        return None if g == 1 else (g, p // g)
+
+    def measure(m, n_dev, grid, halo, mode):
+        mesh = make_host_mesh(n_dev)
+        dist = D.partition_csr(m, n_dev, b_r=128, grid=grid)
+        x = np.zeros(dist.n_global_pad, np.float32)
+        x[:m.n_rows] = rng.standard_normal(m.n_rows)
+        xj = jax.device_put(jnp.asarray(x),
+                            jax.NamedSharding(mesh, P("data")))
+        mv = jax.jit(dist_operator(dist, mesh, mode=mode, halo=halo).matvec)
+        return timed(mv, xj), dist
+
+    out = []
+    b_r = 128
+    configs = [("bulk_full_1d", "full", "vector", False),
+               ("gathered_overlap_1d", "gathered", "overlap", False),
+               ("gathered_overlap_2d", "gathered", "overlap", True)]
+
+    # strong scaling: fixed problem, growing mesh
+    n_strong = 8 * b_r * 2
+    m_strong = banded(n_strong, reach=384)
+    base = {}
+    for label, halo, mode, use2d in configs:
+        for p in (1, 2, 4, 8):
+            grid = square_grid(p) if use2d else None
+            if use2d and grid is None and p > 1:
+                continue                   # 2-D needs a composite mesh
+            t, dist = measure(m_strong, p, grid, halo, mode)
+            if p == 1:
+                base[label] = t
+            out.append(dict(kind="strong_scaling", config=label, n_dev=p,
+                            grid=grid, halo=halo, mode=mode, t_us=t * 1e6,
+                            halo_w=int(dist.halo_w),
+                            efficiency=base[label] / (p * t)))
+
+    # weak scaling: constant rows/device, growing mesh AND problem
+    n_base = b_r * 2
+    for label, halo, mode, use2d in configs:
+        for p in (1, 2, 4, 8):
+            grid = square_grid(p) if use2d else None
+            if use2d and grid is None and p > 1:
+                continue
+            m = banded(n_base * p, reach=min(384, n_base * p // 2))
+            t, dist = measure(m, p, grid, halo, mode)
+            if p == 1:
+                base[label] = t
+            out.append(dict(kind="weak_scaling", config=label, n_dev=p,
+                            grid=grid, halo=halo, mode=mode, t_us=t * 1e6,
+                            halo_w=int(dist.halo_w),
+                            efficiency=base[label] / t))
+    print("RESULTS " + json.dumps(out))
+""")
+
+
+def scaling_curves(print_rows=True):
+    """Measured strong/weak parallel-efficiency rows (see module
+    docstring); consumed by ``bench_dist`` into ``BENCH_dist.json``."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(
+        os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _CURVES_SCRIPT],
+                       capture_output=True, text=True, env=env, timeout=560)
+    if r.returncode != 0:
+        raise RuntimeError(r.stderr[-2000:])
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULTS ")][-1]
+    rows = json.loads(line[len("RESULTS "):])
+    if print_rows:
+        for row in rows:
+            print(csv_row(
+                f"{row['kind']}_{row['config']}_p{row['n_dev']}",
+                row["t_us"], f"eff={row['efficiency']:.2f} "
+                f"halo_w={row['halo_w']}"))
+    return rows
 
 
 def _model_curve(n_rows, n_nzr, chips=(1, 2, 4, 8, 16, 32)):

@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.core import formats as F
 from repro.core import dist_spmv as D
+from repro.core import perf_model as PM
 from repro.kernels import ops
 
 __all__ = [
@@ -497,9 +498,9 @@ def dist_operator(
     mesh,
     *,
     axis: str = "data",
-    mode: D.Mode = "overlap",
+    mode: str = "overlap",
     backend: ops.Backend = "auto",
-    halo: D.Halo = "gathered",
+    halo: str = "gathered",
     transpose: str = "device",
     b_r: int = 128,
     diag_align: int = 8,
@@ -508,6 +509,8 @@ def dist_operator(
     sigma: Optional[int] = None,
     index_dtype="auto",
     tune: str = "off",
+    grid=None,
+    build_stages: bool = True,
 ) -> DistOperator:
     """Partition ``m`` over ``mesh[axis]`` as a :class:`DistOperator`.
 
@@ -520,13 +523,41 @@ def dist_operator(
     per-device slice spans fit (they are structurally bounded by the
     row partition — see ``dist_spmv.partition_csr``).
 
+    ``grid=(gr, gc)`` partitions over a 2-D device grid (halo volume
+    shrinks with ``gr``, the partial-sum reduction rides grid rows of
+    ``gc`` — see ``dist_spmv``); the transpose partition uses the
+    SWAPPED grid ``(gc, gr)``, since transposing exchanges the roles of
+    the x halo and the y reduction.  ``grid="auto"`` picks the shape:
+    measured by the tuner when ``tune`` is on, otherwise the
+    model-cheapest of ``dist_spmv.grid_shapes`` under
+    ``perf_model.predicted_dist_spmv_seconds``.
+
+    ``halo="auto"`` resolves the gathered-vs-full exchange crossover
+    from the installed ``perf_model`` calibration
+    (``perf_model.choose_halo``; fit the per-message fixed costs with
+    ``tune.calibrate.fit_link_calibration`` first, or let the tuner
+    measure the winner directly).  ``mode="auto"`` likewise defers to
+    the tuner, falling back to ``"overlap"``.
+
     ``tune="auto"|"force"`` measures the best tile height for the LOCAL
     and REMOTE operands independently (``repro.tune.tune_partition``;
     cached persistently like the single-device tuner) and partitions
     with the winners — the forward and transpose partitions are tuned
     separately, since ``A^T``'s halo coupling is the mirror structure.
+    When any of ``grid``/``halo``/``mode`` is ``"auto"`` the tuner
+    additionally sweeps the communication config over ``mesh`` (one
+    timed sharded spMVM per candidate) and the measured winners fill
+    the auto slots.
     """
     if isinstance(m, D.DistPJDS):
+        if grid not in (None, "auto"):
+            raise ValueError("grid cannot be changed on an existing "
+                             "DistPJDS; partition the host CSR instead")
+        if mode == "auto":
+            mode = "overlap"
+        if halo == "auto":
+            halo = PM.choose_halo(m, mode=mode,
+                                  value_bytes=m.loc_val.dtype.itemsize)
         return DistOperator(m, mesh, axis=axis, mode=mode, backend=backend,
                             halo=halo)
     n_dev = mesh.shape[axis]
@@ -534,28 +565,58 @@ def dist_operator(
         raise ValueError(f"tune must be 'off', 'auto' or 'force'; "
                          f"got {tune!r}")
 
-    def _chunks(mm):
+    sweep = tune != "off" and ("auto" in (grid, halo, mode))
+
+    def _chunks(mm, comm_sweep=False):
         if tune == "off":
-            return chunk_l, None
+            return chunk_l, None, None
         from repro import tune as T    # deferred: tune imports kernels.ops
         tp = T.tune_partition(mm, n_dev, b_r=b_r, diag_align=diag_align,
                               sigma=sigma, index_dtype=index_dtype,
-                              force=(tune == "force"))
-        return tp.chunk_l, tp.rem_chunk_l
+                              force=(tune == "force"),
+                              mesh=mesh if comm_sweep else None, axis=axis)
+        return tp.chunk_l, tp.rem_chunk_l, tp
 
-    cl, rcl = _chunks(m)
-    dist = D.partition_csr(m, n_dev, b_r=b_r, diag_align=diag_align,
-                           chunk_l=cl, halo_w=halo_w, sigma=sigma,
-                           index_dtype=index_dtype, rem_chunk_l=rcl)
+    cl, rcl, tp = _chunks(m, comm_sweep=sweep)
+    if sweep:
+        if grid == "auto":
+            grid = tp.grid
+        if halo == "auto" and tp.halo:
+            halo = tp.halo
+        if mode == "auto" and tp.mode:
+            mode = tp.mode
+    if mode == "auto":
+        mode = "overlap"
+
+    def _build(mm, g, clb, rclb, hw):
+        return D.partition_csr(mm, n_dev, b_r=b_r, diag_align=diag_align,
+                               chunk_l=clb, halo_w=hw, sigma=sigma,
+                               index_dtype=index_dtype, rem_chunk_l=rclb,
+                               grid=g, build_stages=build_stages)
+
+    if grid == "auto":
+        # No measured sweep available: price every grid shape with the
+        # (calibrated) perf model and keep the cheapest partition.
+        cands = [_build(m, g if g != (n_dev, 1) else None, cl, rcl, halo_w)
+                 for g in D.grid_shapes(n_dev)]
+        hs = ("gathered", "full") if halo == "auto" else (halo,)
+        cost = [min(PM.predicted_dist_spmv_seconds(
+                        d, halo=h, mode=mode,
+                        value_bytes=d.loc_val.dtype.itemsize)
+                    for h in hs) for d in cands]
+        dist = cands[int(np.argmin(cost))]
+    else:
+        dist = _build(m, grid, cl, rcl, halo_w)
+    if halo == "auto":
+        halo = PM.choose_halo(dist, mode=mode,
+                              value_bytes=dist.loc_val.dtype.itemsize)
+
     t_dist = None
     if transpose == "device":
         mt = F.csr_transpose(m)
-        cl_t, rcl_t = _chunks(mt)
-        t_dist = D.partition_csr(mt, n_dev, b_r=b_r,
-                                 diag_align=diag_align, chunk_l=cl_t,
-                                 halo_w=None, sigma=sigma,
-                                 index_dtype=index_dtype,
-                                 rem_chunk_l=rcl_t)
+        cl_t, rcl_t, _ = _chunks(mt)
+        g = dist.grid
+        t_dist = _build(mt, (g[1], g[0]) if g else None, cl_t, rcl_t, None)
     elif transpose is not None:
         raise ValueError(f"transpose must be 'device' or None; "
                          f"got {transpose!r}")

@@ -42,6 +42,8 @@ __all__ = [
     "t_mvm",
     "t_link",
     "t_link_gathered",
+    "predicted_dist_spmv_seconds",
+    "choose_halo",
     "n_nzr_upper_for_link_penalty",
     "n_nzr_lower_for_link_penalty",
     "spmvm_flops",
@@ -98,10 +100,24 @@ class Calibration:
     bw_scale: float
     overhead_s: Mapping[str, float] = dataclasses.field(default_factory=dict)
     source: str = ""
+    # ---- link calibration (repro.tune.calibrate.fit_link_calibration) ----
+    # Effective ICI/interconnect bandwidth scale, and the per-MESSAGE
+    # fixed cost of each halo flavour in seconds — the gather/ppermute/
+    # scatter set-up the pure bytes/bandwidth term cannot see.  This is
+    # exactly why an uncalibrated model makes the gathered exchange look
+    # free at toy scale: 15x fewer bytes, but the same number of
+    # messages, each paying pack/unpack latency.  Missing halo keys cost
+    # 0 (the uncalibrated data-sheet behaviour).
+    link_bw_scale: float = 1.0
+    msg_overhead_s: Mapping[str, float] = dataclasses.field(
+        default_factory=dict)
 
     def __post_init__(self):
         if not (self.bw_scale > 0):
             raise ValueError(f"bw_scale must be > 0; got {self.bw_scale}")
+        if not (self.link_bw_scale > 0):
+            raise ValueError(
+                f"link_bw_scale must be > 0; got {self.link_bw_scale}")
 
 
 _CALIBRATION: Optional[Calibration] = None
@@ -161,18 +177,96 @@ def t_link(n_rows: float, link_bw: float, value_bytes: int = 8) -> float:
 
 
 def t_link_gathered(halo_elems: float, link_bw: float,
-                    value_bytes: int = 8, k: int = 1) -> float:
+                    value_bytes: int = 8, k: int = 1, *,
+                    msgs: int = 0, halo: str = "gathered",
+                    calibration="default") -> float:
     """Gathered-halo refinement of the Eq. (2) link term: with the
     compressed exchange only the MEASURED per-neighbor halo entries cross
     the link, not the full slice.  ``halo_elems`` is the sum of the
-    per-neighbor gathered halo sizes (``DistPJDS.halo_lens``; equals
-    ``comm_bytes_per_device() / value_bytes``); ``k`` scales for a
-    multi-RHS block, whose halo buffers carry k columns per entry.  With
-    this term the model prices what the wire actually carries — a purely
-    block-diagonal partition (halo_elems == 0) costs no link time at
-    all, where the slice-proportional Eq. (2) term would still charge
-    ``2 * n_loc * value_bytes / B_link``."""
-    return value_bytes * k * halo_elems / link_bw
+    per-neighbor gathered halo sizes (``DistPJDS.halo_lens`` plus, on a
+    2-D grid, ``red_lens``; equals ``comm_bytes_per_device() /
+    value_bytes``); ``k`` scales for a multi-RHS block, whose halo
+    buffers carry k columns per entry.  With this term the model prices
+    what the wire actually carries — a purely block-diagonal partition
+    (halo_elems == 0, msgs == 0) costs no link time at all, where the
+    slice-proportional Eq. (2) term would still charge
+    ``2 * n_loc * value_bytes / B_link``.
+
+    ``msgs`` is the point-to-point message count per device per spMVM
+    (``DistPJDS.comm_msgs_per_device``): each message pays the
+    calibrated per-message fixed cost ``msg_overhead_s[halo]`` — the
+    gather/ppermute/scatter set-up that dominates at toy scale and made
+    the UNcalibrated model wrongly prefer the gathered exchange there.
+    The link bandwidth is scaled by the calibrated ``link_bw_scale``.
+    Without an installed calibration (or with ``msgs=0``, the old
+    signature) the term reduces to the pure bytes/bandwidth model."""
+    if calibration == "default":
+        calibration = _CALIBRATION
+    scale = calibration.link_bw_scale if calibration is not None else 1.0
+    fixed = (calibration.msg_overhead_s.get(halo, 0.0)
+             if calibration is not None else 0.0)
+    return value_bytes * k * halo_elems / (link_bw * scale) + msgs * fixed
+
+
+def predicted_dist_spmv_seconds(dist, halo: str = "gathered",
+                                mode: str = "overlap", *, k: int = 1,
+                                value_bytes: int = 4, index_bytes: int = 4,
+                                spec: TPUSpec = TPU_V5E,
+                                calibration="default") -> float:
+    """Per-device wall-time estimate of one distributed spMVM over a
+    :class:`~repro.core.dist_spmv.DistPJDS` partition (duck-typed to
+    avoid a core->core import cycle).
+
+    compute:  local + remote operand streams through the calibrated
+              single-device model (Eq. 1/2 left);
+    comm:     the calibrated link term — measured bytes over the scaled
+              link bandwidth plus the per-message fixed cost
+              (:func:`t_link_gathered`).
+
+    Modes ``vector``/``naive`` serialize compute after comm; modes
+    ``overlap``/``pipeline`` hide the exchange behind the LOCAL kernel
+    (the paper's §3.1 task mode), so only the part of the exchange that
+    outlasts it is charged.  This is the decision function behind
+    ``dist_operator(halo="auto")`` — see :func:`choose_halo`."""
+    if calibration == "default":
+        calibration = _CALIBRATION
+    blk_rows = dist.n_blocks * dist.b_r
+
+    def _t(val_arr):
+        elems = int(val_arr.shape[1]) * int(val_arr.shape[2])
+        if elems == 0:
+            return 0.0
+        return k * predicted_spmv_seconds(
+            elems, blk_rows, elems / blk_rows, spec=spec,
+            value_bytes=value_bytes, index_bytes=index_bytes,
+            fmt="pjds", calibration=calibration)
+
+    t_loc = _t(dist.loc_val)
+    t_rem = _t(dist.rem_val)
+    elems = dist.comm_bytes_per_device(value_bytes=1, k=k, halo=halo)
+    t_comm = t_link_gathered(elems, spec.ici_bw, value_bytes, 1,
+                             msgs=dist.comm_msgs_per_device(halo),
+                             halo=halo, calibration=calibration)
+    if mode in ("overlap", "pipeline"):
+        return max(t_loc, t_comm) + t_rem
+    return t_loc + t_rem + t_comm
+
+
+def choose_halo(dist, mode: str = "overlap", *, k: int = 1,
+                value_bytes: int = 4, spec: TPUSpec = TPU_V5E,
+                calibration="default") -> str:
+    """The calibrated gathered-vs-full crossover decision
+    (``dist_operator(halo="auto")``): price both exchange flavours with
+    :func:`predicted_dist_spmv_seconds` and return the cheaper one.
+    Ties (e.g. halo_w == 0: nothing crosses the wire either way) go to
+    ``"gathered"``."""
+    t_g = predicted_dist_spmv_seconds(dist, "gathered", mode, k=k,
+                                      value_bytes=value_bytes, spec=spec,
+                                      calibration=calibration)
+    t_f = predicted_dist_spmv_seconds(dist, "full", mode, k=k,
+                                      value_bytes=value_bytes, spec=spec,
+                                      calibration=calibration)
+    return "full" if t_f < t_g else "gathered"
 
 
 def n_nzr_upper_for_link_penalty(dev_bw: float, link_bw: float,

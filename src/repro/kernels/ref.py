@@ -19,7 +19,8 @@ from ._backend import acc_dtype as _acc_dtype
 
 __all__ = ["pjds_matvec_ref", "pjds_matmat_ref", "ell_matvec_ref",
            "sell_matvec_ref", "csr_matvec_ref",
-           "csr_rmatvec_ref", "ell_rmatvec_ref", "blocked_rmatvec_ref"]
+           "csr_rmatvec_ref", "ell_rmatvec_ref", "blocked_rmatvec_ref",
+           "partial_reduce_epilogue_ref"]
 
 
 def pjds_matvec_ref(val: jax.Array, col_idx: jax.Array, row_block: jax.Array,
@@ -56,6 +57,29 @@ def sell_matvec_ref(val: jax.Array, col_idx: jax.Array, row_block: jax.Array,
     back to the original row order (y[i] = y_sorted[inv_perm[i]])."""
     y_sorted = pjds_matvec_ref(val, col_idx, row_block, x, n_blocks)
     return y_sorted[inv_perm]
+
+
+def partial_reduce_epilogue_ref(y_sorted: jax.Array, own_pos: jax.Array,
+                                red_send_pos: jax.Array, red_lens: tuple):
+    """Local half of the 2-D partial-sum reduction epilogue.
+
+    A 2-D-partitioned device's kernel output ``y_sorted`` holds PARTIAL
+    sums for its whole row block in the SORTED row basis.  The epilogue
+    never unpermutes the full block: it gathers the device's OWN y slice
+    (``own_pos``, the sorted positions of its segment) and, per grid-row
+    ring distance, the compact buffer of partial rows to ship
+    (``red_send_pos[kk, :red_lens[kk]]``; padding lanes gather position 0
+    and are dropped by the receiver's scatter sentinel).  The collective
+    ppermute + scatter-add lives in ``core.dist_spmv``; this function is
+    the kernel-side, unit-testable piece.
+
+    Returns ``(y_own, bufs)`` with one buffer per entry of ``red_lens``
+    (``None`` for empty distances).
+    """
+    y_own = y_sorted[own_pos]
+    bufs = [y_sorted[red_send_pos[kk, :h]] if h else None
+            for kk, h in enumerate(red_lens)]
+    return y_own, bufs
 
 
 def csr_matvec_ref(data: jax.Array, indices: jax.Array, row_ids: jax.Array,

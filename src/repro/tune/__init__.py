@@ -15,13 +15,15 @@ Entry points most callers want are one level up —
 ``dist_operator(m, mesh, tune="auto")`` — which route here.
 """
 from .space import (Candidate, enumerate_candidates, heuristic_candidate,
-                    price_candidate, prune_candidates, solver_candidates)
+                    price_candidate, prune_candidates, solver_candidates,
+                    dist_candidates)
 from .measure import (measure_candidate, measure_solver_candidate,
-                      prepare_candidate, ab_compare,
+                      measure_dist_candidate, prepare_candidate, ab_compare,
                       median_seconds, device_kind, measurement_backend)
 from .cache import (TuneCache, default_cache, cache_key,
                     dtype_policy, RECORD_SCHEMA)
 from .calibrate import (fit_calibration, model_error,
+                        fit_link_calibration, link_model_error,
                         rows_from_bench_kernels, fit_from_bench_kernels)
 from .autotune import (TuneResult, TunePartition, SolverTuneResult,
                        autotune, tune_partition, tune_solver)
@@ -45,10 +47,14 @@ __all__ = [
     "dtype_policy",
     "fit_calibration",
     "model_error",
+    "fit_link_calibration",
+    "link_model_error",
     "rows_from_bench_kernels",
     "fit_from_bench_kernels",
     "solver_candidates",
+    "dist_candidates",
     "measure_solver_candidate",
+    "measure_dist_candidate",
     "TuneResult",
     "TunePartition",
     "SolverTuneResult",

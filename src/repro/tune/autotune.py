@@ -218,13 +218,20 @@ def tune_solver(
 @dataclasses.dataclass
 class TunePartition:
     """Independently chosen tile heights for a row partition's local
-    (block-diagonal) and remote (halo-coupling) operands."""
+    (block-diagonal) and remote (halo-coupling) operands, plus — when
+    the sweep ran over a mesh — the measured-best communication config
+    (``halo`` flavour, execution ``mode``, 2-D ``grid`` shape; ``None``
+    each when no mesh was given, ``grid=None`` also meaning the 1-D
+    ``(n_dev, 1)`` winner)."""
 
     chunk_l: int
     rem_chunk_l: int
     rows: list
     cached: bool
     key: str
+    halo: Optional[str] = None
+    mode: Optional[str] = None
+    grid: Optional[tuple] = None
 
 
 def _measure_operand(sub: F.CSRMatrix, perm: np.ndarray, b_r: int,
@@ -256,6 +263,9 @@ def tune_partition(
     iters: int = 3,
     cache: Optional[C.TuneCache] = None,
     force: bool = False,
+    mesh=None,
+    axis: str = "data",
+    comm_candidates: Optional[Sequence[dict]] = None,
 ) -> TunePartition:
     """Measure the best ``chunk_l`` for the local and remote operands of
     an ``n_dev``-way row partition of ``m``, independently.
@@ -266,25 +276,48 @@ def tune_partition(
     shared total-row-length windowed sort ``partition_csr`` will use.
     The result feeds ``partition_csr(..., chunk_l=, rem_chunk_l=)``
     through ``core.operator.dist_operator(tune=...)``.
+
+    With a ``mesh`` the tuner additionally sweeps the COMMUNICATION
+    config — halo flavour x execution mode x 2-D grid shape
+    (``space.dist_candidates``, or an explicit ``comm_candidates``
+    list) — by timing one full sharded spMVM per candidate with the
+    chunk winners baked in, and returns the measured-best triple in
+    ``.halo`` / ``.mode`` / ``.grid``.  The sweep rows double as
+    ``calibrate.fit_link_calibration`` input (each carries the
+    candidate's ``msgs`` / ``bytes`` wire statistics), so one tuning
+    pass also yields the calibrated gathered-vs-full crossover model.
     """
     from repro.core import dist_spmv as D   # deferred: dist_spmv imports ops
+    from .space import dist_candidates as _dist_cands
 
     if cache is None:
         cache = C.default_cache()
+    sweep = mesh is not None
+    if sweep and comm_candidates is None:
+        comm_candidates = _dist_cands(n_dev)
+    comm_sig = ""
+    if sweep:
+        comm_sig = ":comm=" + ";".join(
+            f"{c.get('grid')}/{c['halo']}/{c['mode']}/{c.get('halo_w')}"
+            for c in comm_candidates)
     key = C.cache_key(
         F.structural_fingerprint(m), ME.device_kind(),
         C.dtype_policy(None, index_dtype),
         extra=(f"partition:n_dev={n_dev}:b_r={b_r}:sigma={sigma}"
                f":da={diag_align}"
-               f":cl={','.join(map(str, chunk_l_options))}"))
+               f":cl={','.join(map(str, chunk_l_options))}" + comm_sig))
+    require = (("chunk_l", "rem_chunk_l", "halo", "mode")
+               if sweep else ("chunk_l", "rem_chunk_l"))
     if not force:
-        hit = cache.get(key, require=("chunk_l", "rem_chunk_l"))
+        hit = cache.get(key, require=require)
         if hit is not None:
             try:
-                return TunePartition(chunk_l=int(hit["chunk_l"]),
-                                     rem_chunk_l=int(hit["rem_chunk_l"]),
-                                     rows=list(hit.get("rows", [])),
-                                     cached=True, key=key)
+                return TunePartition(
+                    chunk_l=int(hit["chunk_l"]),
+                    rem_chunk_l=int(hit["rem_chunk_l"]),
+                    rows=list(hit.get("rows", [])), cached=True, key=key,
+                    halo=hit.get("halo"), mode=hit.get("mode"),
+                    grid=(tuple(hit["grid"]) if hit.get("grid") else None))
             except (TypeError, ValueError):
                 cache.quarantined[key] = "malformed chunk_l record"
 
@@ -317,7 +350,26 @@ def tune_partition(
             if t < best.get(which, (np.inf,))[0]:
                 best[which] = (t, cl)
     chunk_l, rem_chunk_l = best["loc"][1], best["rem"][1]
+
+    halo = mode = grid = None
+    if sweep:
+        comm_rows = []
+        for cand in comm_candidates:
+            r = ME.measure_dist_candidate(
+                m, mesh, cand, axis=axis, b_r=b_r, diag_align=diag_align,
+                chunk_l=chunk_l, rem_chunk_l=rem_chunk_l, sigma=sigma,
+                index_dtype=index_dtype, warmup=warmup, iters=iters)
+            r["operand"] = "comm"
+            r["group"] = F.structural_fingerprint(m)
+            comm_rows.append(r)
+        w = comm_rows[int(np.argmin([r["measured_s"] for r in comm_rows]))]
+        halo, mode = w["halo"], w["mode"]
+        grid = tuple(w["grid"]) if w.get("grid") else None
+        rows += comm_rows
+
     cache.put(key, {"chunk_l": chunk_l, "rem_chunk_l": rem_chunk_l,
-                    "rows": rows})
+                    "halo": halo, "mode": mode,
+                    "grid": list(grid) if grid else None, "rows": rows})
     return TunePartition(chunk_l=chunk_l, rem_chunk_l=rem_chunk_l,
-                         rows=rows, cached=False, key=key)
+                         rows=rows, cached=False, key=key,
+                         halo=halo, mode=mode, grid=grid)

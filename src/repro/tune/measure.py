@@ -34,6 +34,7 @@ __all__ = [
     "prepare_candidate",
     "measure_candidate",
     "measure_solver_candidate",
+    "measure_dist_candidate",
     "ab_compare",
 ]
 
@@ -138,6 +139,56 @@ def measure_solver_candidate(
         return r.x
 
     return median_seconds(probe, warmup=warmup, iters=iters) / probe_iters
+
+
+def measure_dist_candidate(
+    m: F.CSRMatrix,
+    mesh,
+    cand: dict,
+    *,
+    axis: str = "data",
+    b_r: int = 128,
+    diag_align: int = 8,
+    chunk_l: int = 8,
+    rem_chunk_l=None,
+    sigma=None,
+    index_dtype="auto",
+    warmup: int = 1,
+    iters: int = 3,
+) -> dict:
+    """Partition ``m`` per distributed candidate ``cand`` (a
+    ``space.dist_candidates`` dict: grid / halo / mode / halo_w) and
+    time one sharded spMVM over ``mesh`` end to end — exchange,
+    kernels, reduction epilogue, everything ``dist_matvec`` runs.
+
+    Returns a row dict carrying the measured median next to the
+    partition's wire statistics (``msgs`` / ``bytes`` per device), in
+    exactly the shape ``calibrate.fit_link_calibration`` consumes —
+    the sweep that picks a winner also feeds the calibrated crossover
+    model for free.
+    """
+    from repro.core import dist_spmv as D     # deferred: imports ops
+
+    n_dev = mesh.shape[axis]
+    dist = D.partition_csr(
+        m, n_dev, b_r=b_r, diag_align=diag_align, chunk_l=chunk_l,
+        halo_w=cand.get("halo_w"), sigma=sigma, index_dtype=index_dtype,
+        rem_chunk_l=rem_chunk_l, grid=cand.get("grid"),
+        build_stages=(cand["mode"] == "pipeline"))
+    fn = jax.jit(D._make_dist_op(dist, mesh, axis, cand["mode"], "auto",
+                                 cand["halo"], multi_rhs=False))
+    rng = np.random.default_rng(MEASURE_SEED)
+    x = jnp.asarray(rng.standard_normal(dist.n_global_pad)
+                    .astype(np.float32))
+    t = median_seconds(fn, x, warmup=warmup, iters=iters)
+    vb = dist.loc_val.dtype.itemsize
+    return dict(
+        grid=cand.get("grid"), halo=cand["halo"], mode=cand["mode"],
+        halo_w=int(dist.halo_w), red_w=int(dist.red_w),
+        msgs=int(dist.comm_msgs_per_device(halo=cand["halo"])),
+        bytes=int(dist.comm_bytes_per_device(value_bytes=vb,
+                                             halo=cand["halo"])),
+        measured_s=float(t))
 
 
 def ab_compare(

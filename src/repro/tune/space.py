@@ -38,6 +38,7 @@ __all__ = [
     "price_candidate",
     "prune_candidates",
     "solver_candidates",
+    "dist_candidates",
 ]
 
 # Default search axes.  Deliberately small: the point of the model-based
@@ -219,6 +220,54 @@ def solver_candidates(
     if h_auto != h_sell:
         out.append(("composed", h_sell))
     return list(dict.fromkeys(out))
+
+
+def dist_candidates(
+    n_dev: int,
+    *,
+    halos: Sequence[str] = ("gathered", "full"),
+    modes: Sequence[str] = ("vector", "overlap", "pipeline"),
+    grids: Optional[Sequence] = None,
+    halo_w_options: Sequence[Optional[int]] = (None,),
+) -> list[dict]:
+    """The DISTRIBUTED probe set: one dict per (grid, halo, mode,
+    halo_w) combination for ``tune_partition``'s communication sweep.
+
+    The grid axis defaults to the three structurally distinct shapes of
+    a ``n_dev`` mesh — pure row partitioning ``(P, 1)``, pure column
+    partitioning ``(1, P)`` and the most-square 2-D factorization plus
+    its transpose — because intermediate rectangles interpolate between
+    those extremes in both halo volume and reduction volume.  The mode
+    axis skips ``"naive"`` (strictly dominated: same exchange as
+    ``"vector"`` plus one dense unpermute) and prunes ``"pipeline"``
+    for full halos — staging a full exchange ships the same bytes in
+    more messages, so it can only win where gathered/pipeline already
+    does.  ``halo_w=None`` means the measured coupling width — wider
+    explicit windows only add structurally empty exchange slots, so the
+    default sweeps none.
+    """
+    if grids is None:
+        gs: list = [(n_dev, 1)]
+        if n_dev > 1:
+            gs.append((1, n_dev))
+        sq = max(g for g in range(1, int(np.sqrt(n_dev)) + 1)
+                 if n_dev % g == 0)
+        if sq > 1:
+            gs += [(sq, n_dev // sq), (n_dev // sq, sq)]
+        grids = list(dict.fromkeys(gs))
+    out = []
+    for grid in grids:
+        for halo in halos:
+            for mode in modes:
+                if mode == "naive" or (mode == "pipeline" and halo == "full"):
+                    continue
+                for hw in halo_w_options:
+                    out.append(dict(grid=(None if grid in (None, (n_dev, 1))
+                                          else tuple(grid)),
+                                    halo=str(halo), mode=str(mode),
+                                    halo_w=hw))
+    return [dict(t) for t in dict.fromkeys(
+        tuple(sorted(c.items(), key=lambda kv: kv[0])) for c in out)]
 
 
 def price_candidate(

@@ -87,6 +87,104 @@ def test_t_link_gathered_prices_measured_halo():
     assert PM.t_link_gathered(80, link, k=4) == pytest.approx(4 * sparse)
 
 
+def test_t_link_gathered_msgs_term():
+    """The per-message fixed cost and the link bandwidth scale only act
+    through an installed/passed calibration; the old positional
+    signature (no msgs, no calibration) is unchanged."""
+    link = 50e9
+    plain = PM.t_link_gathered(80, link, value_bytes=8)
+    # msgs without calibration: fixed cost is 0, nothing changes
+    assert PM.t_link_gathered(80, link, value_bytes=8, msgs=4,
+                              calibration=None) == pytest.approx(plain)
+    cal = PM.Calibration(bw_scale=1.0, link_bw_scale=0.5,
+                         msg_overhead_s={"gathered": 25e-6, "full": 5e-6})
+    got = PM.t_link_gathered(80, link, value_bytes=8, msgs=4,
+                             halo="gathered", calibration=cal)
+    assert got == pytest.approx(8 * 80 / (link * 0.5) + 4 * 25e-6)
+    # the full flavour pays its own (cheaper) per-message cost
+    got_f = PM.t_link_gathered(80, link, value_bytes=8, msgs=4,
+                               halo="full", calibration=cal)
+    assert got_f == pytest.approx(8 * 80 / (link * 0.5) + 4 * 5e-6)
+    # unknown halo key costs 0 fixed (data-sheet behaviour)
+    assert PM.t_link_gathered(80, link, value_bytes=8, msgs=4,
+                              halo="exotic", calibration=cal) \
+        == pytest.approx(8 * 80 / (link * 0.5))
+
+
+def test_calibration_link_fields_validate():
+    with pytest.raises(ValueError):
+        PM.Calibration(bw_scale=1.0, link_bw_scale=0.0)
+    with pytest.raises(ValueError):
+        PM.Calibration(bw_scale=1.0, link_bw_scale=-2.0)
+    cal = PM.Calibration(bw_scale=1.0)
+    assert cal.link_bw_scale == 1.0 and dict(cal.msg_overhead_s) == {}
+
+
+def _banded_partition(halo_w=1, n=256, n_dev=4, reach=None):
+    """Diagonal plus a strided off-band: only every 4th row couples
+    across the device boundary, so the gathered halo is genuinely
+    smaller than the full neighbor slice."""
+    from repro.core import dist_spmv as D, formats as F
+    reach = reach if reach is not None else 64 * halo_w
+    rows, cols, vals = [], [], []
+    for r in range(n):
+        offs = (r - reach, r, r + reach) if r % 4 == 0 else (r,)
+        for c in offs:
+            if 0 <= c < n:
+                rows.append(r), cols.append(c), vals.append(1.0 + r + c)
+    m = F.csr_from_coo(np.array(rows), np.array(cols),
+                       np.array(vals, np.float32), (n, n))
+    return D.partition_csr(m, n_dev, b_r=32)
+
+
+def test_choose_halo_crossover():
+    """Without a calibration the gathered exchange's byte advantage wins;
+    a calibration pricing the gathered per-message set-up flips the
+    decision — the measured toy-scale behaviour."""
+    dist = _banded_partition(halo_w=1)
+    assert dist.halo_w >= 1
+    g_bytes = dist.comm_bytes_per_device(halo="gathered")
+    f_bytes = dist.comm_bytes_per_device(halo="full")
+    assert g_bytes < f_bytes
+    assert PM.choose_halo(dist, calibration=None) == "gathered"
+    pricey = PM.Calibration(bw_scale=1.0,
+                            msg_overhead_s={"gathered": 1e-2})
+    assert PM.choose_halo(dist, calibration=pricey) == "full"
+
+
+def test_choose_halo_tie_goes_gathered():
+    # block-diagonal: halo_w == 0, nothing crosses the wire either way
+    from repro.core import dist_spmv as D, formats as F
+    blk = np.kron(np.eye(4, dtype=np.float32),
+                  np.arange(1, 65 * 64 + 1, dtype=np.float32)[:64 * 64]
+                  .reshape(64, 64))
+    dist = D.partition_csr(F.csr_from_dense(blk), 4, b_r=32)
+    assert dist.halo_w == 0
+    assert PM.choose_halo(dist, calibration=None) == "gathered"
+
+
+def test_predicted_dist_overlap_hides_comm():
+    """Bulk-synchronous modes serialize compute after comm; the
+    overlapped modes charge max(local, comm) + remote, so they can
+    never predict slower."""
+    dist = _banded_partition(halo_w=1)
+    for halo in ("gathered", "full"):
+        t_bulk = PM.predicted_dist_spmv_seconds(
+            dist, halo, "vector", calibration=None)
+        t_ovl = PM.predicted_dist_spmv_seconds(
+            dist, halo, "overlap", calibration=None)
+        t_pipe = PM.predicted_dist_spmv_seconds(
+            dist, halo, "pipeline", calibration=None)
+        assert 0 < t_ovl <= t_bulk
+        assert t_pipe == pytest.approx(t_ovl)
+    # multi-RHS scales the wire term
+    t1 = PM.predicted_dist_spmv_seconds(dist, "gathered", "vector",
+                                        calibration=None)
+    t4 = PM.predicted_dist_spmv_seconds(dist, "gathered", "vector", k=4,
+                                        calibration=None)
+    assert t4 > t1
+
+
 def test_roofline_terms():
     r = PM.roofline_terms(hlo_flops=1e15, hlo_bytes=1e13,
                           collective_bytes=1e11, chips=256)

@@ -256,6 +256,61 @@ def test_rows_from_bench_kernels(tmp_path):
     assert T.model_error(rows, cal) < T.model_error(rows)
 
 
+def test_link_calibration_recovers_synthetic():
+    """fit_link_calibration identifies the per-message fixed cost and
+    the effective link bandwidth from bulk-synchronous rows built with
+    known ground truth, and strictly improves link_model_error."""
+    rng = np.random.default_rng(11)
+    base = {"g1": 120e-6, "g2": 210e-6}
+    cost = {"gathered": 25e-6, "full": 5e-6}
+    inv_bw = 1.0 / (PM.TPU_V5E.ici_bw * 0.5)       # link_bw_scale = 0.5
+    rows = []
+    for group in base:
+        for halo in cost:
+            for msgs, byts in ((2, 4e5), (4, 1.6e6), (6, 6.4e6)):
+                t = base[group] + msgs * cost[halo] + byts * inv_bw
+                rows.append(dict(group=group, halo=halo, msgs=msgs,
+                                 bytes=byts,
+                                 measured_s=t * rng.uniform(0.99, 1.01)))
+    err0 = T.link_model_error(rows)
+    cal = T.fit_link_calibration(rows, source="synthetic")
+    err1 = T.link_model_error(rows, cal)
+    assert err1 < err0 and err1 < 0.05
+    assert cal.msg_overhead_s["gathered"] == pytest.approx(25e-6, rel=0.5)
+    assert cal.msg_overhead_s["gathered"] > cal.msg_overhead_s.get("full", 0)
+    assert cal.link_bw_scale == pytest.approx(0.5, rel=0.5)
+    assert cal.source == "synthetic"
+
+
+def test_link_calibration_rejects_bad_rows():
+    with pytest.raises(ValueError):
+        T.fit_link_calibration([])
+    with pytest.raises(ValueError):
+        T.fit_link_calibration([dict(group="g", halo="full", msgs=2,
+                                     bytes=100, measured_s=0.0)])
+
+
+def test_dist_candidates_enumeration():
+    cands = T.dist_candidates(8)
+    assert all(set(c) == {"grid", "halo", "mode", "halo_w"} for c in cands)
+    # 1-D row partitioning is stored as grid=None
+    assert any(c["grid"] is None for c in cands)
+    grids = {c["grid"] for c in cands}
+    assert {(1, 8), (2, 4), (4, 2)} <= grids
+    # naive is dominated; a staged full exchange cannot win
+    assert not any(c["mode"] == "naive" for c in cands)
+    assert not any(c["mode"] == "pipeline" and c["halo"] == "full"
+                   for c in cands)
+    # pipeline+gathered survives — it is the tentpole configuration
+    assert any(c["mode"] == "pipeline" and c["halo"] == "gathered"
+               for c in cands)
+    # deduped
+    keys = [tuple(sorted(c.items(), key=lambda kv: kv[0])) for c in cands]
+    assert len(keys) == len(set(keys))
+    # degenerate mesh still enumerates
+    assert all(c["grid"] is None for c in T.dist_candidates(1))
+
+
 # ------------------------------------------------- end-to-end threading
 def test_as_device_tune_auto_builds_tuned_statics(cache, monkeypatch):
     monkeypatch.setenv("REPRO_TUNE_CACHE", str(cache.path))
