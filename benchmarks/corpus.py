@@ -1,0 +1,103 @@
+"""On-disk Matrix-Market benchmark corpus (DESIGN.md §13).
+
+Three structural classes cover the regimes where the dispatch heuristic
+makes different calls, mirroring the paper's matrix set without
+shipping multi-MB fixtures in the repo:
+
+* ``fem2d``   — 5-point Poisson stencil: near-uniform ~5/row, the
+  ELLPACK-friendly regime (paper's HMEp/sAMG analogues).
+* ``graph``   — power-law (zipf) row lengths: the padding-hostile
+  regime where pJDS/CMRS win (paper's DLR analogues).
+* ``banded``  — symmetric band matrix under a random symmetric
+  permutation: bandwidth-destroyed structure that RCM fully recovers —
+  the preprocessing stage's acceptance matrix (``reorder="auto"``
+  must decline it single-device and apply it distributed).
+
+All values are small integers stored as f32, so any summation order
+gives bit-identical results — format conformance and ``.mtx``
+round-trips assert ``==``, not ``allclose``.  Files are generated
+deterministically into ``corpus/`` (gitignored) on first use;
+``load()`` round-trips through :mod:`repro.core.io_mm` so the corpus
+also exercises the ingestion path every time a bench runs.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+
+import numpy as np
+
+from repro.core import formats as F, io_mm, matrices as M
+from repro.core.reorder import permute_symmetric
+
+__all__ = ["CORPUS", "generate", "load", "make"]
+
+_DEFAULT_DIR = "corpus"
+
+
+def _integer_values(rows: np.ndarray, cols: np.ndarray) -> np.ndarray:
+    """Deterministic small-integer values, symmetric in (i, j)."""
+    lo = np.minimum(rows, cols)
+    hi = np.maximum(rows, cols)
+    return ((lo * 31 + hi * 17) % 7 + 1).astype(np.float32)
+
+
+def _fem2d() -> F.CSRMatrix:
+    m = M.poisson_2d(48, 48)
+    rows = np.repeat(np.arange(m.n_rows, dtype=np.int64), m.row_lengths())
+    data = _integer_values(rows, m.indices.astype(np.int64))
+    return F.CSRMatrix(m.indptr, m.indices, data, m.shape)
+
+
+def _graph() -> F.CSRMatrix:
+    m = M.power_law(n=4096, seed=11)
+    rows = np.repeat(np.arange(m.n_rows, dtype=np.int64), m.row_lengths())
+    data = ((rows * 13 + m.indices.astype(np.int64) * 5) % 7 + 1
+            ).astype(np.float32)
+    return F.CSRMatrix(m.indptr, m.indices, data, m.shape)
+
+
+def _banded(n: int = 2048, band: int = 3, seed: int = 5) -> F.CSRMatrix:
+    i = np.arange(n, dtype=np.int64)
+    offs = np.arange(-band, band + 1, dtype=np.int64)
+    rows = np.repeat(i, len(offs))
+    cols = (rows + np.tile(offs, n))
+    keep = (cols >= 0) & (cols < n)
+    rows, cols = rows[keep], cols[keep]
+    m = F.csr_from_coo(rows, cols, _integer_values(rows, cols), shape=(n, n))
+    rng = np.random.default_rng(seed)
+    return permute_symmetric(m, rng.permutation(n))
+
+
+CORPUS = {
+    "fem2d": _fem2d,
+    "graph": _graph,
+    "banded": _banded,
+}
+
+
+def make(name: str) -> F.CSRMatrix:
+    """Build a corpus matrix in memory (no files touched)."""
+    return CORPUS[name]()
+
+
+def generate(out_dir: str = _DEFAULT_DIR, force: bool = False) -> dict:
+    """Write every corpus matrix to ``<out_dir>/<name>.mtx`` (skipping
+    files that already exist unless ``force``).  Returns name->path."""
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    paths = {}
+    for name in CORPUS:
+        p = out / f"{name}.mtx"
+        if force or not p.exists():
+            io_mm.save_mm(p, make(name), comment=f"repro corpus: {name}")
+        paths[name] = str(p)
+    return paths
+
+
+def load(out_dir: str = _DEFAULT_DIR) -> dict:
+    """Load the corpus from disk (generating missing files first) as
+    name -> CSRMatrix, every matrix passing through the ``load_mm``
+    admission path."""
+    paths = generate(out_dir)
+    return {name: io_mm.load_mm(p) for name, p in paths.items()}

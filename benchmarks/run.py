@@ -16,7 +16,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table1,fig3,eq,scaling,kernels,sell,"
-                         "ops,dist,tune,solve,serve")
+                         "ops,dist,tune,solve,serve,formats")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -37,6 +37,7 @@ def main() -> None:
         ("tune", bench_tune.run),           # autotuner vs heuristic + calib
         ("solve", bench_solve.run),         # fused solver iterations
         ("serve", bench_serve.run),         # multi-tenant solve serving
+        ("formats", bench_formats.run_corpus),  # .mtx corpus format sweep
     ]
     if only:
         unknown = only - {name for name, _ in suites}

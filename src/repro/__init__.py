@@ -15,7 +15,7 @@ dispatch), ``repro.tune`` (autotuner), ``repro.serve`` (engines).
 from __future__ import annotations
 
 __all__ = ["solve", "SolveResult", "SolveFailure", "operator",
-           "dist_operator"]
+           "dist_operator", "load_mm", "save_mm", "preprocess"]
 
 _LAZY = {
     "solve": "repro.api",
@@ -23,6 +23,9 @@ _LAZY = {
     "SolveFailure": "repro.api",
     "operator": "repro.core.operator",
     "dist_operator": "repro.core.operator",
+    "load_mm": "repro.core.io_mm",
+    "save_mm": "repro.core.io_mm",
+    "preprocess": "repro.core.reorder",
 }
 
 

@@ -3,8 +3,9 @@
 The container the tier-1 suite runs in may not ship ``hypothesis`` (CI
 installs the real thing — see .github/workflows/ci.yml).  Rather than
 skipping the property tests, this module implements the tiny slice of
-the hypothesis API the suite uses — ``given``, ``settings`` and the
-``integers`` / ``floats`` / ``sampled_from`` / ``booleans`` strategies —
+the hypothesis API the suite uses — ``given``, ``settings``, ``assume``
+and the ``integers`` / ``floats`` / ``sampled_from`` / ``booleans``
+strategies —
 with deterministic pseudo-random example generation seeded from the test
 name.  Every property test still executes ``max_examples`` drawn
 examples; what is lost vs real hypothesis is only shrinking and the
@@ -63,6 +64,18 @@ def booleans():
     return _Strategy(lambda rng: bool(rng.integers(0, 2)), "booleans()")
 
 
+class _Unsatisfied(Exception):
+    """Raised by :func:`assume` to discard the current drawn example."""
+
+
+def assume(condition):
+    """Discard the current example when ``condition`` is falsy (the real
+    hypothesis re-draws; the fallback just skips the example)."""
+    if not condition:
+        raise _Unsatisfied
+    return True
+
+
 def given(**strategies):
     """Decorator: run the test once per drawn example (kwargs style only)."""
 
@@ -75,6 +88,8 @@ def given(**strategies):
                 drawn = {k: s.draw(rng) for k, s in strategies.items()}
                 try:
                     fn(*args, **kwargs, **drawn)
+                except _Unsatisfied:
+                    continue           # assume() rejected this example
                 except Exception as e:  # re-raise with the failing example
                     raise AssertionError(
                         f"falsifying example (hypothesis fallback): {drawn}"
@@ -120,6 +135,7 @@ def install():
         setattr(st, f.__name__, f)
     mod.given = given
     mod.settings = settings
+    mod.assume = assume
     mod.strategies = st
     mod.HealthCheck = HealthCheck
     mod.__is_fallback__ = True

@@ -51,9 +51,12 @@ __all__ = [
     "csr_to_ell",
     "csr_to_pjds",
     "csr_to_sell",
+    "CMRSMatrix",
+    "csr_to_cmrs",
     "ell_to_dense",
     "pjds_to_dense",
     "sell_to_dense",
+    "cmrs_to_dense",
     "format_nbytes",
     "storage_elements",
     "data_reduction_vs_ellpack",
@@ -188,7 +191,17 @@ def csr_from_coo(
     shape: Tuple[int, int],
     sum_duplicates: bool = True,
 ) -> CSRMatrix:
-    """Build CSR from COO triplets (vectorised; no scipy dependency)."""
+    """Build CSR from COO triplets (vectorised; no scipy dependency).
+
+    Sorted-per-row invariant: the ``lexsort((cols, rows))`` below runs
+    BEFORE the ``sum_duplicates`` branch, so the output's within-row
+    column indices are ascending on BOTH paths.  Callers that pass
+    ``sum_duplicates=False`` (``csr_transpose``,
+    ``reorder.permute_symmetric``) therefore still satisfy the sorted
+    invariant that ``validate_csr`` enforces and that int16 span
+    compression (``resolve_index_dtype``) assumes — they merely skip
+    deduplication, not the sort.  (On the dedup path the invariant also
+    follows from ``np.unique`` of the ``row * n_cols + col`` key.)"""
     rows = np.asarray(rows, dtype=np.int64)
     cols = np.asarray(cols, dtype=np.int64)
     vals = np.asarray(vals)
@@ -585,6 +598,121 @@ def sell_to_dense(s: SELLMatrix) -> np.ndarray:
 
 
 # --------------------------------------------------------------------------
+# CMRS — Compressed Multi-Row Storage (arXiv:1203.2946), TPU-blocked
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class CMRSMatrix:
+    """CMRS adapted to the TPU tiling: rows stay in ORIGINAL order (no
+    sort, no permutation epilogue) and are grouped into *strips* of
+    ``b_r`` consecutive rows.  Each strip's nonzeros are packed densely,
+    row-major, into ``(strip_su, b_r)`` lane-major tiles: entry ``k`` of
+    a strip lands at sublane ``k // b_r``, lane ``k % b_r`` relative to
+    the strip's first sublane-row.  ``row_in_strip`` is the paper's
+    per-entry row stream (int8, values in ``[0, b_r)``) that routes each
+    slot back to its row inside the strip.
+
+    ``strip_su[s] = ceil(strip_nnz / b_r)`` padded to ``diag_align``
+    (min 1); ``strip_start`` is its exclusive prefix sum in sublane-rows,
+    so strip ``s`` owns tile rows ``strip_start[s]:strip_start[s+1]``.
+    Padding slots carry the usual sentinel (``val == 0``,
+    ``col == PAD_COL``) plus ``row_in_strip == 0``; ``strip_nnz`` keeps
+    the true per-strip count so the pad audit and ``cmrs_to_dense`` can
+    tell padding from stored entries exactly.
+
+    Storage is ~``nnz`` padded to tile granularity — per-row padding
+    vanishes entirely, which is where CMRS beats ELLPACK/pJDS on
+    power-law patterns — at the cost of ``b_r`` flops per slot in the
+    kernel's one-hot segment reduction (``perf_model.cmrs_reduce_seconds``).
+    """
+
+    val: np.ndarray            # (total_su, b_r)
+    col_idx: np.ndarray        # (total_su, b_r) int16/int32
+    row_in_strip: np.ndarray   # (total_su, b_r) int8
+    strip_start: np.ndarray    # (n_strips + 1,) int32, sublane-row offsets
+    strip_len: np.ndarray      # (n_strips,) int32 == diff(strip_start)
+    strip_nnz: np.ndarray      # (n_strips,) int64, true nonzeros per strip
+    shape: Tuple[int, int]
+    b_r: int
+    n_rows_pad: int
+
+    @property
+    def n_strips(self) -> int:
+        return len(self.strip_len)
+
+    @property
+    def total_su(self) -> int:
+        return int(self.strip_start[-1])
+
+
+def csr_to_cmrs(
+    m: CSRMatrix,
+    b_r: int = _DEFAULT_BR,
+    diag_align: int = _DEFAULT_DIAG_ALIGN,
+    index_dtype="auto",
+) -> CMRSMatrix:
+    """Pack ``m`` into CMRS strips of ``b_r`` rows (original order)."""
+    n = m.n_rows
+    n_pad = _pad_to(max(n, 1), b_r)
+    n_strips = n_pad // b_r
+    rl = m.row_lengths()
+    idt = resolve_index_dtype(index_dtype, m.n_cols)
+
+    strip_nnz = np.zeros(n_strips, dtype=np.int64)
+    counts = np.add.reduceat(
+        np.concatenate([rl, np.zeros(n_pad - n, dtype=rl.dtype)]),
+        np.arange(0, n_pad, b_r))
+    strip_nnz[:] = counts
+    strip_len = np.array(
+        [_pad_to(max(-(-int(c) // b_r), 1), diag_align) for c in strip_nnz],
+        dtype=np.int32)
+    strip_start = np.zeros(n_strips + 1, dtype=np.int32)
+    np.cumsum(strip_len, out=strip_start[1:])
+
+    total = int(strip_start[-1])
+    val = np.zeros((total, b_r), dtype=m.data.dtype)
+    col = np.full((total, b_r), PAD_COL, dtype=idt)
+    ris = np.zeros((total, b_r), dtype=np.int8)
+    for s in range(n_strips):
+        r0, r1 = s * b_r, min((s + 1) * b_r, n)
+        lo, hi = int(m.indptr[r0]), int(m.indptr[r1])
+        cnt = hi - lo
+        if cnt == 0:
+            continue
+        su = int(strip_len[s])
+        flat_v = np.zeros(su * b_r, dtype=m.data.dtype)
+        flat_c = np.full(su * b_r, PAD_COL, dtype=idt)
+        flat_r = np.zeros(su * b_r, dtype=np.int8)
+        flat_v[:cnt] = m.data[lo:hi]
+        flat_c[:cnt] = m.indices[lo:hi].astype(idt)
+        flat_r[:cnt] = np.repeat(
+            np.arange(r1 - r0, dtype=np.int64), rl[r0:r1]).astype(np.int8)
+        s0 = int(strip_start[s])
+        val[s0 : s0 + su] = flat_v.reshape(su, b_r)
+        col[s0 : s0 + su] = flat_c.reshape(su, b_r)
+        ris[s0 : s0 + su] = flat_r.reshape(su, b_r)
+
+    cm = CMRSMatrix(
+        val=val, col_idx=col, row_in_strip=ris,
+        strip_start=strip_start, strip_len=strip_len, strip_nnz=strip_nnz,
+        shape=m.shape, b_r=b_r, n_rows_pad=n_pad)
+    if PAD_AUDIT:
+        assert_padding_invariant(cm)
+    return cm
+
+
+def cmrs_to_dense(c: CMRSMatrix) -> np.ndarray:
+    a = np.zeros(c.shape, dtype=c.val.dtype)
+    for s in range(c.n_strips):
+        s0, su = int(c.strip_start[s]), int(c.strip_len[s])
+        cnt = int(c.strip_nnz[s])
+        v = c.val[s0 : s0 + su].reshape(-1)[:cnt]
+        ci = c.col_idx[s0 : s0 + su].reshape(-1)[:cnt]
+        ri = c.row_in_strip[s0 : s0 + su].reshape(-1)[:cnt]
+        np.add.at(a, (s * c.b_r + ri.astype(np.int64), ci.astype(np.int64)), v)
+    return a
+
+
+# --------------------------------------------------------------------------
 # Transpose metadata (the operator protocol's rmatvec "device" path)
 # --------------------------------------------------------------------------
 def csr_transpose(m: CSRMatrix) -> CSRMatrix:
@@ -595,6 +723,11 @@ def csr_transpose(m: CSRMatrix) -> CSRMatrix:
     representation whose FORWARD kernels compute ``A^T x``, so the
     transpose path reuses the gather-structured spMVM instead of a
     scatter (DESIGN.md §8).
+
+    The ``sum_duplicates=False`` fast path is safe here: duplicates in
+    ``m`` stay duplicates in the transpose (matvec sums them either
+    way), and ``csr_from_coo`` sorts within rows before that branch, so
+    the result still satisfies the sorted-per-row invariant.
     """
     rows = np.repeat(np.arange(m.n_rows, dtype=np.int64), m.row_lengths())
     return csr_from_coo(m.indices.astype(np.int64), rows, m.data,
@@ -700,6 +833,20 @@ def assert_padding_invariant(fmt) -> None:
             _check_pad(f"PJDSMatrix block {b}", fmt.val[s:e][pad],
                        fmt.col_idx[s:e][pad])
         return
+    if isinstance(fmt, CMRSMatrix):
+        for s in range(fmt.n_strips):
+            s0, su = int(fmt.strip_start[s]), int(fmt.strip_len[s])
+            cnt = int(fmt.strip_nnz[s])
+            v = fmt.val[s0 : s0 + su].reshape(-1)[cnt:]
+            c = fmt.col_idx[s0 : s0 + su].reshape(-1)[cnt:]
+            _check_pad(f"CMRSMatrix strip {s}", v, c)
+            r = fmt.row_in_strip[s0 : s0 + su].reshape(-1)[cnt:]
+            if r.size and np.any(r != 0):
+                raise AssertionError(
+                    f"CMRSMatrix strip {s}: padded entries carry "
+                    f"row_in_strip != 0 — the segment reduction would "
+                    f"scatter stale zeros into arbitrary rows")
+        return
     if isinstance(fmt, CSRMatrix):
         return              # CSR stores no padding
     raise TypeError(type(fmt))
@@ -719,6 +866,8 @@ def storage_elements(fmt) -> int:
         return int(fmt.val.size)
     if isinstance(fmt, SELLMatrix):
         return int(fmt.pjds.val.size)
+    if isinstance(fmt, CMRSMatrix):
+        return int(fmt.val.size)
     raise TypeError(type(fmt))
 
 
@@ -746,6 +895,9 @@ def format_nbytes(fmt, value_bytes: int | None = None,
         return base + fmt.n_rows_pad * 4          # rowlen (ELLPACK-R)
     if isinstance(fmt, PJDSMatrix):
         return base + (fmt.n_blocks + 1) * 4 + fmt.n_rows_pad * 4  # col_start + perm
+    if isinstance(fmt, CMRSMatrix):
+        # + the int8 row-in-strip stream and the strip offsets
+        return base + e * 1 + (fmt.n_strips + 1) * 4
     raise TypeError(type(fmt))
 
 
@@ -806,4 +958,13 @@ def estimate_storage_elements(
         if sigma is None:
             sigma = 8 * b_r
         return int(windowed_block_lengths(rl, b_r, diag_align, sigma).sum()) * b_r
+    if fmt == "cmrs":
+        n_pad = _pad_to(max(len(rl), 1), b_r)
+        rl_pad = np.zeros(n_pad, dtype=np.int64)
+        rl_pad[: len(rl)] = rl
+        strip_nnz = rl_pad.reshape(-1, b_r).sum(axis=1)
+        su = np.array(
+            [_pad_to(max(-(-int(c) // b_r), 1), diag_align)
+             for c in strip_nnz], dtype=np.int64)
+        return int(su.sum()) * b_r
     raise ValueError(f"unknown format {fmt!r}")

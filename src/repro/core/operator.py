@@ -280,7 +280,16 @@ class DeviceOperator(SparseOperator):
 def _device_diagonal(sd: ops.SparseDevice) -> jax.Array:
     """diag(A) straight from the device layout (no host matrix needed):
     mask each stored entry on ``column == original row`` and reduce with
-    the same segment structure the matvec uses."""
+    the same segment structure the matvec uses.  A preprocessing
+    permutation (``reorder=``) stores B = P A P^T, whose diagonal is
+    diag(A) permuted — ``diag(A) = diag(B)[pre_inv]``."""
+    dg = _device_diagonal_stored(sd)
+    if sd.pre_inv is not None:
+        dg = dg[sd.pre_inv]
+    return dg
+
+
+def _device_diagonal_stored(sd: ops.SparseDevice) -> jax.Array:
     n = sd.shape[0]
     d = sd.dev
     if sd.fmt == "csr":
@@ -305,6 +314,13 @@ def _device_diagonal(sd: ops.SparseDevice) -> jax.Array:
         blk = jax.ops.segment_sum(keep, d.row_block,
                                   num_segments=int(n_pad // b_r))
         return blk.reshape(n_pad)[inv][:n]
+    if sd.fmt == "cmrs":
+        b_r = d.val.shape[1]
+        rows = d.strip_map[:, None] * b_r + d.row_in_strip.astype(jnp.int32)
+        keep = jnp.where(d.col_idx.astype(jnp.int32) == rows, d.val, 0)
+        return jax.ops.segment_sum(
+            keep.reshape(-1), rows.reshape(-1),
+            num_segments=d.n_strips * b_r)[:n]
     raise ValueError(f"unknown format {sd.fmt!r}")
 
 
@@ -342,7 +358,9 @@ class DistOperator(SparseOperator):
                  t_dist: Optional[D.DistPJDS] = None,
                  diag: Optional[jax.Array] = None,
                  axis: str = "data", mode: D.Mode = "overlap",
-                 backend: ops.Backend = "auto", halo: D.Halo = "gathered"):
+                 backend: ops.Backend = "auto", halo: D.Halo = "gathered",
+                 pre_perm: Optional[jax.Array] = None,
+                 pre_inv: Optional[jax.Array] = None):
         self.dist = dist
         self.mesh = mesh
         self.t_dist = t_dist
@@ -351,6 +369,12 @@ class DistOperator(SparseOperator):
         self.mode = mode
         self.backend = backend
         self.halo = halo
+        # Preprocessing (reorder=) permutation over the PADDED global
+        # index space (identity on the pad tail): the partition holds
+        # B = P A P^T and every apply sandwiches, so callers stay in
+        # the original basis.  ``diag`` is already original-basis.
+        self.pre_perm = pre_perm
+        self.pre_inv = pre_inv
         self._fwd_cache = {}     # (which partition, multi_rhs) -> closure
 
     # -- structure ---------------------------------------------------------
@@ -382,37 +406,45 @@ class DistOperator(SparseOperator):
             self._fwd_cache[key] = fn
         return fn
 
+    def _sandwich(self, apply, v):
+        """Run ``apply`` in the stored (reordered) basis: gather v into
+        it, gather the result back out.  B = P A P^T is
+        symmetric-permuted, so the SAME sandwich serves A and A^T."""
+        if self.pre_perm is None:
+            return apply(v)
+        return apply(v[self.pre_perm])[self.pre_inv]
+
     def matvec(self, x):
         fwd = self._fwd(self.dist, multi_rhs=False)
         if self.t_dist is None:
-            return fwd(x)
-        return _linear_with_transpose(
-            fwd, self._fwd(self.t_dist, multi_rhs=False), x)
+            return self._sandwich(fwd, x)
+        return self._sandwich(lambda v: _linear_with_transpose(
+            fwd, self._fwd(self.t_dist, multi_rhs=False), v), x)
 
     def matmat(self, x):
         fwd = self._fwd(self.dist, multi_rhs=True)
         if self.t_dist is None:
-            return fwd(x)
-        return _linear_with_transpose(
-            fwd, self._fwd(self.t_dist, multi_rhs=True), x)
+            return self._sandwich(fwd, x)
+        return self._sandwich(lambda v: _linear_with_transpose(
+            fwd, self._fwd(self.t_dist, multi_rhs=True), v), x)
 
     def rmatvec(self, y):
         if self.t_dist is None:
             raise ValueError(
                 "this DistOperator was built without a transpose partition; "
                 "use dist_operator(m, mesh, transpose='device')")
-        return _linear_with_transpose(
+        return self._sandwich(lambda v: _linear_with_transpose(
             self._fwd(self.t_dist, multi_rhs=False),
-            self._fwd(self.dist, multi_rhs=False), y)
+            self._fwd(self.dist, multi_rhs=False), v), y)
 
     def rmatmat(self, y):
         if self.t_dist is None:
             raise ValueError(
                 "this DistOperator was built without a transpose partition; "
                 "use dist_operator(m, mesh, transpose='device')")
-        return _linear_with_transpose(
+        return self._sandwich(lambda v: _linear_with_transpose(
             self._fwd(self.t_dist, multi_rhs=True),
-            self._fwd(self.dist, multi_rhs=True), y)
+            self._fwd(self.dist, multi_rhs=True), v), y)
 
     def diagonal(self):
         if self.diag is None:
@@ -422,15 +454,17 @@ class DistOperator(SparseOperator):
 
     # -- pytree ------------------------------------------------------------
     def tree_flatten(self):
-        return ((self.dist, self.t_dist, self.diag),
+        return ((self.dist, self.t_dist, self.diag, self.pre_perm,
+                 self.pre_inv),
                 (self.mesh, self.axis, self.mode, self.backend, self.halo))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        dist, t_dist, diag = children
+        dist, t_dist, diag, pre_perm, pre_inv = children
         mesh, axis, mode, backend, halo = aux
         return cls(dist, mesh, t_dist=t_dist, diag=diag, axis=axis,
-                   mode=mode, backend=backend, halo=halo)
+                   mode=mode, backend=backend, halo=halo,
+                   pre_perm=pre_perm, pre_inv=pre_inv)
 
 
 # --------------------------------------------------------------------------
@@ -450,7 +484,13 @@ def operator(
     ``SparseDevice``, or already an operator (returned unchanged).
     Conversion and caching ride :func:`kernels.ops.as_device`;
     ``format``/``convert_kwargs`` (b_r, diag_align, sigma, chunk_l,
-    dtype, index_dtype, x_tiles, tune) pass through — in particular
+    dtype, index_dtype, x_tiles, tune, reorder) pass through — in
+    particular ``reorder="auto"`` runs the priced RCM preprocessing
+    stage (``core.reorder.preprocess``): the permutation is recorded on
+    the device operand and every apply transparently permutes in and
+    unpermutes out, so callers stay in the original basis (with
+    ``transpose="device"`` each operand prices and sandwiches its own
+    reorder independently), and
     ``dtype=jnp.bfloat16`` stores a compressed bf16 value stream (f32
     accumulation; ``op.dtype`` reports the storage dtype, results come
     back f32), ``index_dtype="auto"`` (the default) compresses the
@@ -511,6 +551,7 @@ def dist_operator(
     tune: str = "off",
     grid=None,
     build_stages: bool = True,
+    reorder: str = "off",
 ) -> DistOperator:
     """Partition ``m`` over ``mesh[axis]`` as a :class:`DistOperator`.
 
@@ -539,6 +580,16 @@ def dist_operator(
     measure the winner directly).  ``mode="auto"`` likewise defers to
     the tuner, falling back to ``"overlap"``.
 
+    ``reorder="auto"|"rcm"`` runs the priced RCM preprocessing stage
+    (``core.reorder.preprocess``) on the host CSR before partitioning,
+    with the halo term evaluated at this mesh's device count: "auto"
+    applies the permutation only when the calibrated model predicts the
+    reduced halo outweighs the per-apply permute sandwich, "rcm" forces
+    it.  The operator records the permutation and every
+    matvec/rmatvec/solve transparently permutes in and unpermutes out,
+    so callers stay in the original row/column basis (the diagonal is
+    stored original-basis too).
+
     ``tune="auto"|"force"`` measures the best tile height for the LOCAL
     and REMOTE operands independently (``repro.tune.tune_partition``;
     cached persistently like the single-device tuner) and partitions
@@ -564,6 +615,19 @@ def dist_operator(
     if tune not in ("off", "auto", "force"):
         raise ValueError(f"tune must be 'off', 'auto' or 'force'; "
                          f"got {tune!r}")
+    if reorder not in ("off", "auto", "rcm"):
+        raise ValueError(f"reorder must be 'off', 'auto' or 'rcm'; "
+                         f"got {reorder!r}")
+
+    perm_host = inv_host = None
+    diag_host = F.csr_diagonal(m)          # original basis, pre-reorder
+    if reorder != "off":
+        from repro.core import reorder as RO
+        pp = RO.preprocess(m, reorder=reorder, n_dev=n_dev,
+                           value_bytes=m.data.dtype.itemsize)
+        if pp.applied:
+            m = pp.matrix
+            perm_host, inv_host = pp.perm, pp.inv_perm
 
     sweep = tune != "off" and ("auto" in (grid, halo, mode))
 
@@ -621,6 +685,16 @@ def dist_operator(
         raise ValueError(f"transpose must be 'device' or None; "
                          f"got {transpose!r}")
     dg = np.zeros(dist.n_global_pad, dtype=m.data.dtype)
-    dg[: m.n_rows] = F.csr_diagonal(m)
+    dg[: m.n_rows] = diag_host
+    pre_perm = pre_inv = None
+    if perm_host is not None:
+        # Extend to the padded global space with an identity tail so the
+        # sandwich gathers commute with the partition padding.
+        tail = np.arange(m.n_rows, dist.n_global_pad)
+        pre_perm = jnp.asarray(
+            np.concatenate([perm_host, tail]).astype(np.int32))
+        pre_inv = jnp.asarray(
+            np.concatenate([inv_host, tail]).astype(np.int32))
     return DistOperator(dist, mesh, t_dist=t_dist, diag=jnp.asarray(dg),
-                        axis=axis, mode=mode, backend=backend, halo=halo)
+                        axis=axis, mode=mode, backend=backend, halo=halo,
+                        pre_perm=pre_perm, pre_inv=pre_inv)

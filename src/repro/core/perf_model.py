@@ -49,6 +49,8 @@ __all__ = [
     "spmvm_flops",
     "spmvm_bytes",
     "perm_traffic_bytes",
+    "CMRS_RIS_BYTES",
+    "cmrs_reduce_seconds",
     "predicted_spmv_seconds",
     "SOLVER_SPMV_COUNT",
     "SOLVER_VECTOR_PASSES",
@@ -337,6 +339,22 @@ def perm_traffic_bytes(n_rows: int, value_bytes: int = 4,
     if window_local:
         return 0.0
     return float(n_rows) * (2 * value_bytes + index_bytes)
+
+
+# CMRS stores one extra byte per slot: the int8 row-in-strip stream that
+# routes each densely-packed slot back to its row (core.formats.CMRSMatrix).
+CMRS_RIS_BYTES = 1
+
+
+def cmrs_reduce_seconds(stored_elements: int, b_r: int,
+                        spec: TPUSpec = TPU_V5E) -> float:
+    """Compute term of the CMRS in-kernel segment reduction: every
+    stored slot feeds a one-hot ``(1, chunk*b_r) @ (chunk*b_r, b_r)``
+    matmul, i.e. ``2 * b_r`` f32 MXU flops per slot.  CMRS trades
+    ELLPACK/pJDS's padding bytes for these flops, so callers price it
+    as ``max(memory_term, this)`` — on TPU the MXU overlaps the HBM
+    stream, and whichever term is longer bounds the kernel."""
+    return 2.0 * float(stored_elements) * float(b_r) / spec.peak_flops_f32
 
 
 def predicted_spmv_seconds(stored_elements: int, n_rows: int, n_nzr: float,

@@ -42,22 +42,26 @@ from .pjds_spmv import pjds_matvec_kernel_call
 from .pjds_spmm import pjds_matmat_kernel_call
 from .ellr_spmv import ell_matvec_kernel_call
 from .sell_spmv import sell_matvec_kernel_call, window_blocks
+from .cmrs_spmv import cmrs_matvec_kernel_call
 
 __all__ = [
     "PJDSDevice",
     "ELLDevice",
     "SELLDevice",
     "CSRDevice",
+    "CMRSDevice",
     "SparseDevice",
     "to_device_pjds",
     "to_device_ell",
     "to_device_sell",
     "to_device_csr",
+    "to_device_cmrs",
     "pjds_matvec",
     "pjds_matmat",
     "ell_matvec",
     "sell_matvec",
     "csr_matvec",
+    "cmrs_matvec",
     "select_format",
     "as_device",
     "spmv",
@@ -68,7 +72,7 @@ __all__ = [
 ]
 
 Backend = Literal["auto", "kernel", "ref"]
-FormatName = Literal["auto", "csr", "ellpack_r", "pjds", "sell"]
+FormatName = Literal["auto", "csr", "ellpack_r", "pjds", "sell", "cmrs"]
 Tune = Literal["off", "auto", "force"]
 
 
@@ -169,6 +173,32 @@ class CSRDevice:
     n_rows: int = dataclasses.field(metadata=dict(static=True))
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CMRSDevice:
+    """Device-resident CMRS operand (``formats.CMRSMatrix``): strips of
+    b_r consecutive ORIGINAL-order rows, nonzeros packed densely with an
+    int8 row-in-strip routing stream.  ``chunk_map`` plays pJDS's role —
+    strip id per (chunk_l, b_r) tile chunk for the scalar-prefetched
+    kernel grid; ``strip_map`` is its per-sublane-row sibling for the
+    segment-sum refs."""
+
+    val: jax.Array                     # (total_su, b_r)
+    col_idx: jax.Array                 # (total_su, b_r) int16/int32
+    row_in_strip: jax.Array            # (total_su, b_r) int8
+    chunk_map: jax.Array               # (total_su // chunk_l,) int32
+    strip_map: jax.Array               # (total_su,) int32 (for the ref)
+    n_strips: int = dataclasses.field(metadata=dict(static=True))
+    b_r: int = dataclasses.field(metadata=dict(static=True))
+    chunk_l: int = dataclasses.field(metadata=dict(static=True))
+    max_chunks: Optional[int] = dataclasses.field(
+        default=None, metadata=dict(static=True))
+
+    @property
+    def n_rows_pad(self) -> int:
+        return self.n_strips * self.b_r
+
+
 def _blocked_maps(block_len: np.ndarray, chunk_l: int, n_blocks: int):
     row_block = np.repeat(np.arange(n_blocks, dtype=np.int32), block_len)
     return row_block, row_block[::chunk_l].copy()
@@ -256,6 +286,28 @@ def to_device_csr(m: F.CSRMatrix, dtype=None) -> CSRDevice:
     )
 
 
+def to_device_cmrs(c: F.CMRSMatrix, chunk_l: int = 8,
+                   dtype=None) -> CMRSDevice:
+    if np.any(c.strip_len % chunk_l):
+        raise ValueError(
+            f"chunk_l={chunk_l} must divide every strip length; rebuild the "
+            f"CMRS matrix with diag_align a multiple of chunk_l"
+        )
+    strip_map, chunk_map = _blocked_maps(c.strip_len, chunk_l, c.n_strips)
+    val = c.val if dtype is None else c.val.astype(dtype)
+    return CMRSDevice(
+        val=jnp.asarray(val),
+        col_idx=jnp.asarray(c.col_idx),
+        row_in_strip=jnp.asarray(c.row_in_strip),
+        chunk_map=jnp.asarray(chunk_map),
+        strip_map=jnp.asarray(strip_map),
+        n_strips=c.n_strips,
+        b_r=c.b_r,
+        chunk_l=chunk_l,
+        max_chunks=int(c.strip_len.max(initial=chunk_l)) // chunk_l,
+    )
+
+
 def choose_x_tiles(n_cols_pad: int, itemsize: int,
                    vmem_limit: Optional[int] = None) -> int:
     """Column-tile count for the x-blocked kernels: the smallest power of
@@ -330,6 +382,19 @@ def csr_matvec(a: CSRDevice, x: jax.Array,
     return R.csr_matvec_ref(a.data, a.indices, a.row_ids, x, a.n_rows)
 
 
+def cmrs_matvec(a: CMRSDevice, x: jax.Array,
+                backend: Backend = "ref", x_tiles: int = 1) -> jax.Array:
+    """y = A x in the ORIGINAL row order; y has n_rows_pad entries."""
+    if resolve_backend(backend) == "kernel":
+        return cmrs_matvec_kernel_call(
+            a.val, a.col_idx, a.row_in_strip, a.chunk_map, x,
+            n_strips=a.n_strips, chunk_l=a.chunk_l, max_chunks=a.max_chunks,
+            x_tiles=x_tiles,
+        )
+    return R.cmrs_matvec_ref(a.val, a.col_idx, a.row_in_strip, a.strip_map,
+                             x, a.n_strips)
+
+
 # --------------------------------------------------------------------------
 # Unified dispatch: SparseDevice + spmv(a, x, format="auto")
 # --------------------------------------------------------------------------
@@ -355,8 +420,15 @@ def select_format(
     memory-bound spMVM time (``perf_model.predicted_spmv_seconds``) from
     its estimated padded storage (``formats.estimate_storage_elements``)
     plus the HBM cost of any out-of-kernel permutation, then takes the
-    first minimum in the fixed order ellpack_r < sell < pjds.  CSR wins
-    only for degenerate inputs (empty, or too few rows to fill blocks).
+    first minimum in the fixed order ellpack_r < sell < pjds < cmrs.
+    CSR wins only for degenerate inputs (empty, or too few rows to fill
+    blocks).  CMRS is priced as ``max(memory, compute)``: its densely
+    packed strips store ~nnz elements regardless of row-length skew —
+    where ELLPACK/pJDS pad — but every slot costs ``2 * b_r`` MXU flops
+    in the kernel's one-hot segment reduction
+    (``perf_model.cmrs_reduce_seconds``), so it wins exactly when the
+    padding bytes it saves outweigh that compute floor (power-law /
+    hub-dominated patterns).
     The pricing sees the byte widths that will actually be STORED —
     ``value_dtype`` (bf16 storage halves the value stream) and
     ``index_dtype`` (int16 when the column span fits halves the index
@@ -403,6 +475,13 @@ def select_format(
             spec=spec, value_bytes=vb, index_bytes=ib, vec_bytes=vecb,
             x_tiles=x_tiles, n_row_blocks=n_row_blocks, fmt="pjds"),
     }
+    cmrs_elems = F.estimate_storage_elements(rl, "cmrs", b_r, diag_align)
+    candidates["cmrs"] = max(
+        PM.predicted_spmv_seconds(
+            cmrs_elems, n, n_nzr, spec=spec, value_bytes=vb,
+            index_bytes=ib + PM.CMRS_RIS_BYTES, vec_bytes=vecb,
+            x_tiles=x_tiles, n_row_blocks=n_row_blocks, fmt="cmrs"),
+        PM.cmrs_reduce_seconds(cmrs_elems * x_tiles, b_r, spec))
     if x_tiles > 1:
         candidates.pop("ellpack_r")   # its kernel keeps x resident
     return min(candidates, key=candidates.get)
@@ -426,9 +505,16 @@ class SparseDevice:
 
     fmt: str = dataclasses.field(metadata=dict(static=True))
     shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
-    dev: Union[PJDSDevice, ELLDevice, SELLDevice, CSRDevice]
+    dev: Union[PJDSDevice, ELLDevice, SELLDevice, CSRDevice, CMRSDevice]
     inv_perm: Optional[jax.Array]      # pjds only: undo the global row sort
     x_tiles: int = dataclasses.field(default=1, metadata=dict(static=True))
+    # Preprocessing (reorder=) permutation: the stored matrix is
+    # B = P A P^T with perm[k] = old index at new position k
+    # (core.reorder's convention), and every entry point sandwiches —
+    # y = B_path(x[pre_perm])[pre_inv] — so callers always see the
+    # ORIGINAL basis.  None (default) = no preprocessing, zero overhead.
+    pre_perm: Optional[jax.Array] = None
+    pre_inv: Optional[jax.Array] = None
 
     @property
     def n_rows(self) -> int:
@@ -453,6 +539,14 @@ class SparseDevice:
         if x.ndim == 2:
             return self.matmat(x, backend)
         self._check_cols(x)
+        if self.pre_perm is not None:
+            x = x[self.pre_perm]
+        y = self._matvec_stored(x, backend)
+        if self.pre_inv is not None:
+            y = y[self.pre_inv]
+        return y
+
+    def _matvec_stored(self, x: jax.Array, backend: str) -> jax.Array:
         if self.fmt == "csr":
             return csr_matvec(self.dev, x, backend)
         if self.fmt == "ellpack_r":
@@ -463,6 +557,9 @@ class SparseDevice:
         if self.fmt == "pjds":
             y_p = pjds_matvec(self.dev, x, backend, x_tiles=self.x_tiles)
             return y_p[self.inv_perm][: self.n_rows]
+        if self.fmt == "cmrs":
+            return cmrs_matvec(self.dev, x, backend,
+                               x_tiles=self.x_tiles)[: self.n_rows]
         raise ValueError(f"unknown format {self.fmt!r}")
 
     def matmat(self, x: jax.Array, backend: Backend = "auto") -> jax.Array:
@@ -476,6 +573,14 @@ class SparseDevice:
         """
         backend = resolve_backend(backend)
         self._check_cols(x)
+        if self.pre_perm is not None:
+            x = x[self.pre_perm]
+        y = self._matmat_stored(x, backend)
+        if self.pre_inv is not None:
+            y = y[self.pre_inv]
+        return y
+
+    def _matmat_stored(self, x: jax.Array, backend: str) -> jax.Array:
         if self.fmt == "csr":
             return R.csr_matvec_ref(self.dev.data, self.dev.indices,
                                     self.dev.row_ids, x, self.dev.n_rows)
@@ -491,6 +596,11 @@ class SparseDevice:
             y_p = pjds_matmat(a, x, backend)
             inv = d.inv_perm if self.fmt == "sell" else self.inv_perm
             return y_p[inv][: self.n_rows]
+        if self.fmt == "cmrs":
+            d = self.dev
+            return R.cmrs_matvec_ref(d.val, d.col_idx, d.row_in_strip,
+                                     d.strip_map, x,
+                                     d.n_strips)[: self.n_rows]
         raise ValueError(f"unknown format {self.fmt!r}")
 
     def rmatvec(self, y: jax.Array, backend: Backend = "auto") -> jax.Array:
@@ -509,6 +619,16 @@ class SparseDevice:
         """X = A^T Y, original basis: (shape[0][, k]) -> (shape[1][, k])."""
         del backend    # scatter path only; see operator(transpose="device")
         self._check_rows(y)
+        # A^T = P^T B^T P, so the transpose wears the SAME sandwich as
+        # the forward (B = P A P^T is symmetric-permuted).
+        if self.pre_perm is not None:
+            y = y[self.pre_perm]
+        z = self._rmatmat_stored(y)
+        if self.pre_inv is not None:
+            z = z[self.pre_inv]
+        return z
+
+    def _rmatmat_stored(self, y: jax.Array) -> jax.Array:
         n_cols = self.shape[1]
         if self.fmt == "csr":
             return R.csr_rmatvec_ref(self.dev.data, self.dev.indices,
@@ -523,6 +643,11 @@ class SparseDevice:
             y_p = self._scatter_to_storage(y, inv)
             return R.blocked_rmatvec_ref(d.val, d.col_idx, d.row_block,
                                          y_p, n_cols)
+        if self.fmt == "cmrs":
+            d = self.dev
+            y_pad = self._pad_rows(y, d.n_rows_pad)
+            return R.cmrs_rmatvec_ref(d.val, d.col_idx, d.row_in_strip,
+                                      d.strip_map, y_pad, n_cols)
         raise ValueError(f"unknown format {self.fmt!r}")
 
     def _pad_rows(self, y: jax.Array, n_pad: int) -> jax.Array:
@@ -611,6 +736,7 @@ def as_device(
     x_tiles: Union[int, str] = "auto",
     tune: Tune = "off",
     validate: str = "off",
+    reorder: str = "off",
 ) -> SparseDevice:
     """Wrap a matrix as a :class:`SparseDevice`, converting at most once.
 
@@ -648,6 +774,19 @@ def as_device(
     overridden.  A caller-supplied ``diag_align`` is ignored under
     tuning: the build must match the measured geometry exactly.
 
+    ``reorder`` is the PREPROCESSING stage (``core.reorder.preprocess``,
+    DESIGN.md §13): ``"rcm"`` applies the reverse Cuthill-McKee
+    symmetric permutation before conversion (and before tuning — the
+    reordered structure is what gets fingerprinted and measured);
+    ``"auto"`` applies it only when the calibrated perf model predicts
+    the bandwidth/storage gain beats the one-time permute cost plus the
+    per-matvec permute/unpermute sandwich; ``"off"`` (default) skips it.
+    The permutation is recorded on the returned ``SparseDevice``
+    (``pre_perm``/``pre_inv``), so ``matvec``/``rmatvec`` transparently
+    accept and return vectors in the ORIGINAL basis.  Non-square
+    matrices and ``reorder="auto"`` quietly skip (RCM is a symmetric
+    permutation); an explicit ``"rcm"`` on a non-square matrix raises.
+
     ``validate`` is the admission gate for host matrices
     (``formats.validate_csr``): ``"check"`` raises
     ``formats.CSRValidationError`` on out-of-range/unsorted indices,
@@ -682,18 +821,9 @@ def as_device(
     if tune not in ("off", "auto", "force"):
         raise ValueError(f"tune must be 'off', 'auto' or 'force'; "
                          f"got {tune!r}")
-    if tune != "off":
-        from repro import tune as T   # deferred: tune imports this module
-        best = T.autotune(a, format=format, dtype=dtype,
-                          index_dtype=index_dtype,
-                          force=(tune == "force")).best
-        # Rebuild with EXACTLY the geometry the tuner measured
-        # (Candidate.build_kwargs, which owns diag_align) — a
-        # caller-supplied diag_align would change padding out from
-        # under the cached decision.
-        return as_device(a, dtype=dtype, index_dtype=index_dtype,
-                         tune="off", **best.build_kwargs())
-
+    if reorder not in ("off", "auto", "rcm"):
+        raise ValueError(f"reorder must be 'off', 'auto' or 'rcm'; "
+                         f"got {reorder!r}")
 
     if x_tiles == "auto":
         # Size the tile by the RUNTIME vector width (>= f32), not the
@@ -704,10 +834,44 @@ def as_device(
     key = (id(a), format, b_r, diag_align, sigma, chunk_l,
            np.dtype(dtype).name if dtype is not None else None,
            "auto" if index_dtype == "auto" else np.dtype(index_dtype).name,
-           x_tiles)
-    hit = _DEVICE_CACHE.get(key)
-    if hit is not None and hit[0]() is a:
-        return hit[1]
+           x_tiles, reorder, tune)
+    if tune != "force":      # force must re-measure, never serve a hit
+        hit = _DEVICE_CACHE.get(key)
+        if hit is not None and hit[0]() is a:
+            return hit[1]
+
+    # Preprocessing stage: runs BEFORE tuning so the reordered structure
+    # is what gets fingerprinted, priced and measured.
+    a_orig = a
+    pre_perm = pre_inv = None
+    if reorder != "off":
+        from repro.core import reorder as RO   # deferred: light module
+        pp = RO.preprocess(a, reorder=reorder,
+                           value_bytes=(np.dtype(dtype).itemsize
+                                        if dtype is not None
+                                        else a.data.dtype.itemsize))
+        if pp.applied:
+            a = pp.matrix
+            pre_perm = jnp.asarray(pp.perm.astype(np.int32))
+            pre_inv = jnp.asarray(pp.inv_perm.astype(np.int32))
+
+    if tune != "off":
+        from repro import tune as T   # deferred: tune imports this module
+        best = T.autotune(a, format=format, dtype=dtype,
+                          index_dtype=index_dtype,
+                          force=(tune == "force")).best
+        # Rebuild with EXACTLY the geometry the tuner measured
+        # (Candidate.build_kwargs, which owns diag_align) — a
+        # caller-supplied diag_align would change padding out from
+        # under the cached decision.
+        sd = as_device(a, dtype=dtype, index_dtype=index_dtype,
+                       tune="off", **best.build_kwargs())
+        if pre_perm is not None:
+            sd = dataclasses.replace(sd, pre_perm=pre_perm,
+                                     pre_inv=pre_inv)
+        if tune != "force":
+            _cache_put(key, a_orig, sd)
+        return sd
 
     # The kernels need diag_align % chunk_l == 0; raise it once here so
     # the selection pricing sees the same padding the builders produce.
@@ -741,12 +905,16 @@ def as_device(
                           index_dtype=index_dtype)
         dev = to_device_pjds(p, chunk_l=chunk_l, dtype=dtype)
         inv_perm = jnp.asarray(p.inv_perm)
+    elif fmt == "cmrs":
+        c = F.csr_to_cmrs(a, b_r=b_r, diag_align=da,
+                          index_dtype=index_dtype)
+        dev = to_device_cmrs(c, chunk_l=chunk_l, dtype=dtype)
     else:
         raise ValueError(f"unknown format {fmt!r}")
 
     sd = SparseDevice(fmt=fmt, shape=a.shape, dev=dev, inv_perm=inv_perm,
-                      x_tiles=x_tiles)
-    _cache_put(key, a, sd)
+                      x_tiles=x_tiles, pre_perm=pre_perm, pre_inv=pre_inv)
+    _cache_put(key, a_orig, sd)
     return sd
 
 

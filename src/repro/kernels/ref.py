@@ -20,6 +20,7 @@ from ._backend import acc_dtype as _acc_dtype
 __all__ = ["pjds_matvec_ref", "pjds_matmat_ref", "ell_matvec_ref",
            "sell_matvec_ref", "csr_matvec_ref",
            "csr_rmatvec_ref", "ell_rmatvec_ref", "blocked_rmatvec_ref",
+           "cmrs_matvec_ref", "cmrs_rmatvec_ref",
            "partial_reduce_epilogue_ref"]
 
 
@@ -80,6 +81,44 @@ def partial_reduce_epilogue_ref(y_sorted: jax.Array, own_pos: jax.Array,
     bufs = [y_sorted[red_send_pos[kk, :h]] if h else None
             for kk, h in enumerate(red_lens)]
     return y_own, bufs
+
+
+def cmrs_matvec_ref(val: jax.Array, col_idx: jax.Array,
+                    row_in_strip: jax.Array, strip_map: jax.Array,
+                    x: jax.Array, n_strips: int) -> jax.Array:
+    """CMRS y = A x in the ORIGINAL row order (no permutation).
+
+    val/col_idx/row_in_strip: (total_su, b_r); strip_map: (total_su,)
+    int32 mapping each sublane-row to its strip.  Each slot scatters to
+    global row ``strip_map * b_r + row_in_strip`` — padding slots carry
+    val == 0 so their scatter target (row 0 of the strip) is harmless.
+    x: (n_pad,) or (n_pad, k); returns (n_strips * b_r[, k]).
+    """
+    b_r = val.shape[1]
+    dt = _acc_dtype(val.dtype, x.dtype)
+    rows = strip_map[:, None] * b_r + row_in_strip.astype(jnp.int32)
+    gathered = x[col_idx].astype(dt)           # (total_su, b_r[, k])
+    v = val.astype(dt)
+    contrib = gathered * (v[..., None] if gathered.ndim == 3 else v)
+    flat = contrib.reshape(-1, *contrib.shape[2:])
+    return jax.ops.segment_sum(flat, rows.reshape(-1),
+                               num_segments=n_strips * b_r)
+
+
+def cmrs_rmatvec_ref(val: jax.Array, col_idx: jax.Array,
+                     row_in_strip: jax.Array, strip_map: jax.Array,
+                     y: jax.Array, n_cols: int) -> jax.Array:
+    """CMRS z = A^T y: gather y at each slot's global row, scatter by
+    column.  y: (n_rows_pad,) or (n_rows_pad, k); returns (n_cols[, k])."""
+    b_r = val.shape[1]
+    dt = _acc_dtype(val.dtype, y.dtype)
+    rows = strip_map[:, None] * b_r + row_in_strip.astype(jnp.int32)
+    gathered = y[rows].astype(dt)              # (total_su, b_r[, k])
+    v = val.astype(dt)
+    contrib = gathered * (v[..., None] if gathered.ndim == 3 else v)
+    flat = contrib.reshape(-1, *contrib.shape[2:])
+    return jax.ops.segment_sum(flat, col_idx.reshape(-1).astype(jnp.int32),
+                               num_segments=n_cols)
 
 
 def csr_matvec_ref(data: jax.Array, indices: jax.Array, row_ids: jax.Array,

@@ -152,7 +152,7 @@ def enumerate_candidates(
     if m.nnz == 0 or n < ops._CSR_MIN_ROWS_FACTOR * min(b_r_options):
         return list(dict.fromkeys([Candidate(fmt="csr"), heur]))
 
-    fmts = (["csr", "ellpack_r", "pjds", "sell"] if format == "auto"
+    fmts = (["csr", "ellpack_r", "pjds", "sell", "cmrs"] if format == "auto"
             else [format])
     auto_t = _auto_x_tiles(m)
     out = [heur]
@@ -164,7 +164,7 @@ def enumerate_candidates(
         # may run (mirrors select_format's restriction); when it CAN be
         # resident, offering the tiled grid would only add re-read
         # traffic, so the resident build is the sole option.
-        if fmt in ("sell", "pjds"):
+        if fmt in ("sell", "pjds", "cmrs"):
             tile_opts = sorted({auto_t} | ({1} if auto_t == 1 else
                                            {auto_t, 2 * auto_t}))
         else:
@@ -303,11 +303,19 @@ def price_candidate(
     if c.fmt in ("sell", "pjds"):
         perm_bytes = PM.perm_traffic_bytes(
             n, vecb, window_local=(c.fmt == "sell"))
-    return PM.predicted_spmv_seconds(
+    if c.fmt == "cmrs":
+        # Same max(memory, compute) pricing as select_format: the int8
+        # row_in_strip stream adds a byte per slot, and the one-hot
+        # reduction matmul can bound the kernel instead of HBM.
+        ib += PM.CMRS_RIS_BYTES
+    t = PM.predicted_spmv_seconds(
         elems, n, n_nzr, perm_bytes=perm_bytes, spec=spec,
         value_bytes=vb, index_bytes=ib, vec_bytes=vecb,
         x_tiles=c.x_tiles, n_row_blocks=-(-n // c.b_r),
         fmt=c.fmt, calibration=calibration)
+    if c.fmt == "cmrs":
+        t = max(t, PM.cmrs_reduce_seconds(elems * c.x_tiles, c.b_r, spec))
+    return t
 
 
 def prune_candidates(

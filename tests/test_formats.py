@@ -152,3 +152,30 @@ def test_dlr2_has_dense_blocks():
             assert np.count_nonzero(blk) == 25
             hits += 1
     assert hits > 0
+
+
+def test_csr_transpose_rows_sorted_no_duplicates(rng):
+    """The audited invariant behind csr_transpose's
+    sum_duplicates=False: csr_from_coo lexsorts BEFORE the dedup
+    branch, so within-row columns come out sorted on both paths."""
+    d = (rng.random((80, 50)) < 0.15) * rng.standard_normal((80, 50))
+    m = F.csr_from_dense(d)
+    mt = F.csr_transpose(m)
+    _, report = F.validate_csr(mt)         # raises on unsorted/dup rows
+    assert report.ok
+    np.testing.assert_array_equal(F.csr_to_dense(mt), d.T)
+
+
+def test_csr_from_coo_no_dedup_still_sorted(rng):
+    rows = rng.integers(0, 30, size=200)
+    cols = rng.integers(0, 30, size=200)
+    vals = rng.standard_normal(200)
+    # drop duplicates so sum_duplicates=False is legal, shuffle hard
+    key = rows * 30 + cols
+    _, first = np.unique(key, return_index=True)
+    rows, cols, vals = rows[first], cols[first], vals[first]
+    sh = rng.permutation(len(rows))
+    m = F.csr_from_coo(rows[sh], cols[sh], vals[sh], shape=(30, 30),
+                       sum_duplicates=False)
+    _, report = F.validate_csr(m)
+    assert report.ok

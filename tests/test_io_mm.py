@@ -1,0 +1,167 @@
+"""Matrix-Market ingestion/export: round trips, symmetry expansion,
+the validate_csr admission funnel, and malformed-file rejection."""
+import io
+
+import numpy as np
+import pytest
+
+from repro.core import formats as F
+from repro.core.io_mm import (MatrixMarketError, load_mm, read_mm,
+                              save_mm)
+
+
+def _random_csr(rng, n=40, density=0.1, dtype=np.float64):
+    d = (rng.random((n, n)) < density) * rng.standard_normal((n, n))
+    r, c = np.nonzero(d)
+    return F.csr_from_coo(r, c, d[r, c].astype(dtype), shape=(n, n))
+
+
+def _same(a, b):
+    return (np.array_equal(a.indptr, b.indptr)
+            and np.array_equal(a.indices, b.indices)
+            and np.array_equal(a.data, b.data)
+            and a.shape == b.shape)
+
+
+def _roundtrip(m, **save_kw):
+    buf = io.StringIO()
+    save_mm(buf, m, **save_kw)
+    buf.seek(0)
+    return buf, load_mm(buf, dtype=m.data.dtype)
+
+
+def test_general_roundtrip_f64_bit_exact(rng):
+    m = _random_csr(rng)
+    _, m2 = _roundtrip(m)
+    assert _same(m, m2)
+
+
+def test_general_roundtrip_f32_bit_exact(rng):
+    m = _random_csr(rng, dtype=np.float32)
+    _, m2 = _roundtrip(m)
+    assert _same(m, m2)
+
+
+def test_symmetric_detected_and_halved(rng):
+    d = (rng.random((30, 30)) < 0.15) * rng.standard_normal((30, 30))
+    d = d + d.T
+    r, c = np.nonzero(d)
+    m = F.csr_from_coo(r, c, d[r, c], shape=(30, 30))
+    buf, m2 = _roundtrip(m)
+    assert "coordinate real symmetric" in buf.getvalue().splitlines()[0]
+    # lower triangle only on disk
+    stored = int(buf.getvalue().splitlines()[1].split()[2])
+    assert stored < m.nnz
+    assert _same(m, m2)
+
+
+def test_skew_symmetric_roundtrip(rng):
+    u = np.triu((rng.random((24, 24)) < 0.2) * rng.standard_normal((24, 24)),
+                1)
+    d = u - u.T
+    r, c = np.nonzero(d)
+    m = F.csr_from_coo(r, c, d[r, c], shape=(24, 24))
+    buf, m2 = _roundtrip(m)
+    assert "skew-symmetric" in buf.getvalue().splitlines()[0]
+    assert _same(m, m2)
+
+
+def test_pattern_field_loads_as_ones(rng):
+    m = _random_csr(rng)
+    buf, m2 = _roundtrip(m, field="pattern")
+    assert "pattern" in buf.getvalue().splitlines()[0]
+    assert np.all(m2.data == 1.0)
+    assert np.array_equal(m.indices, m2.indices)
+
+
+def test_integer_field_roundtrip(rng):
+    m = _random_csr(rng)
+    mi = F.CSRMatrix(m.indptr, m.indices,
+                     np.round(m.data * 100).astype(np.int64), m.shape)
+    buf = io.StringIO()
+    save_mm(buf, mi)
+    assert "coordinate integer" in buf.getvalue().splitlines()[0]
+    buf.seek(0)
+    m2 = load_mm(buf)
+    assert np.array_equal(mi.data.astype(np.float64), m2.data)
+
+
+def test_array_format_column_major():
+    txt = ("%%MatrixMarket matrix array real general\n"
+           "% comment line\n2 3\n1.5\n2.5\n3.5\n4.5\n5.5\n6.5\n")
+    m = load_mm(io.StringIO(txt))
+    expect = np.array([[1.5, 3.5, 5.5], [2.5, 4.5, 6.5]])
+    assert np.array_equal(F.csr_to_dense(m), expect)
+
+
+def test_array_symmetric_expands_lower_triangle():
+    txt = "%%MatrixMarket matrix array real symmetric\n2 2\n1\n2\n3\n"
+    m = load_mm(io.StringIO(txt))
+    assert np.array_equal(F.csr_to_dense(m),
+                          np.array([[1., 2.], [2., 3.]]))
+
+
+def test_duplicates_summed():
+    txt = ("%%MatrixMarket matrix coordinate real general\n"
+           "2 2 3\n1 1 2.0\n1 1 3.0\n2 2 1.0\n")
+    m = load_mm(io.StringIO(txt))
+    assert np.array_equal(F.csr_to_dense(m), np.array([[5., 0.], [0., 1.]]))
+
+
+def test_unsupported_field_rejected():
+    with pytest.raises(MatrixMarketError, match="complex"):
+        load_mm(io.StringIO(
+            "%%MatrixMarket matrix coordinate complex general\n1 1 0\n"))
+
+
+def test_bad_banner_rejected():
+    with pytest.raises(MatrixMarketError, match="banner"):
+        load_mm(io.StringIO("not a matrix market file\n"))
+
+
+def test_entry_count_mismatch_rejected():
+    txt = ("%%MatrixMarket matrix coordinate real general\n"
+           "2 2 3\n1 1 1.0\n2 2 1.0\n")
+    with pytest.raises(MatrixMarketError, match="declared 3"):
+        load_mm(io.StringIO(txt))
+
+
+def test_nonzero_skew_diagonal_rejected():
+    txt = ("%%MatrixMarket matrix coordinate real skew-symmetric\n"
+           "2 2 2\n2 1 1.0\n1 1 5.0\n")
+    with pytest.raises(MatrixMarketError, match="diagonal"):
+        load_mm(io.StringIO(txt))
+
+
+def test_out_of_range_repaired_or_strict():
+    txt = ("%%MatrixMarket matrix coordinate real general\n"
+           "2 2 2\n1 1 1.0\n3 1 9.0\n")
+    m = load_mm(io.StringIO(txt))                   # repair drops it
+    assert m.nnz == 1
+    with pytest.raises(MatrixMarketError):
+        load_mm(io.StringIO(txt), validate="strict")
+
+
+def test_file_path_roundtrip(tmp_path, rng):
+    m = _random_csr(rng, dtype=np.float32)
+    p = tmp_path / "m.mtx"
+    save_mm(p, m, comment="two\nlines")
+    m2 = load_mm(p, dtype=np.float32)
+    assert _same(m, m2)
+
+
+def test_read_mm_header_fields():
+    txt = ("%%MatrixMarket matrix coordinate real general\n"
+           "2 3 1\n1 2 4.0\n")
+    hdr, rows, cols, vals = read_mm(io.StringIO(txt))
+    assert (hdr.format, hdr.field, hdr.symmetry) == ("coordinate", "real",
+                                                     "general")
+    assert hdr.shape == (2, 3) and hdr.nnz == 1
+    assert rows[0] == 0 and cols[0] == 1 and vals[0] == 4.0
+
+
+def test_rectangular_symmetric_rejected():
+    txt = ("%%MatrixMarket matrix coordinate real symmetric\n"
+           "2 3 1\n1 1 1.0\n")
+    with pytest.raises(MatrixMarketError, match="2x3"):
+        load_mm(io.StringIO(txt))

@@ -58,7 +58,7 @@ def _parity(fmt, b_r, chunk_l, x_tiles, dtype, index_dtype, tol):
 @pytest.mark.parametrize("dtype,index_dtype,tol", _DTYPES)
 @pytest.mark.parametrize("b_r,chunk_l", _STATICS)
 @pytest.mark.parametrize("x_tiles", [1, 2])
-@pytest.mark.parametrize("fmt", ["pjds", "sell"])
+@pytest.mark.parametrize("fmt", ["pjds", "sell", "cmrs"])
 def test_blocked_kernel_grid(fmt, b_r, chunk_l, x_tiles, dtype,
                              index_dtype, tol):
     _parity(fmt, b_r, chunk_l, x_tiles, dtype, index_dtype, tol)

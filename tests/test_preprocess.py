@@ -1,0 +1,128 @@
+"""The priced preprocessing stage: RCM bandwidth property, transparent
+permute/unpermute round trips, model-gated application, and the
+distributed halo-bytes win (DESIGN.md §13)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core import dist_spmv as D, formats as F
+from repro.core.operator import operator
+from repro.core.reorder import bandwidth, permute_symmetric, preprocess
+from repro.kernels import ops
+
+
+def _banded(n, band, seed=None, integer_values=True):
+    """Symmetric band matrix, optionally shuffled by a random symmetric
+    permutation (seed!=None).  Integer-valued f32 data so any summation
+    order is bit-exact."""
+    i = np.arange(n, dtype=np.int64)
+    offs = np.arange(-band, band + 1, dtype=np.int64)
+    rows = np.repeat(i, len(offs))
+    cols = rows + np.tile(offs, n)
+    keep = (cols >= 0) & (cols < n)
+    rows, cols = rows[keep], cols[keep]
+    lo, hi = np.minimum(rows, cols), np.maximum(rows, cols)
+    data = ((lo * 31 + hi * 17) % 7 + 1).astype(np.float32)
+    m = F.csr_from_coo(rows, cols, data, shape=(n, n))
+    if seed is not None:
+        m = permute_symmetric(m, np.random.default_rng(seed).permutation(n))
+    return m
+
+
+# -- property: RCM never increases bandwidth on connected symmetric ----
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(40, 300), band=st.integers(1, 5),
+       seed=st.integers(0, 10_000))
+def test_rcm_never_increases_bandwidth(n, band, seed):
+    from repro.core.reorder import rcm_permutation
+    m = _banded(n, band, seed=seed)
+    bw0 = bandwidth(m)
+    assume(bw0 > 4 * band)         # the shuffle actually destroyed the band
+    bw1 = bandwidth(permute_symmetric(m, rcm_permutation(m)))
+    assert bw1 <= bw0
+    # a connected band-b graph admits a BFS level width <= 2b
+    assert bw1 <= 2 * band
+
+
+def test_preprocess_forced_matvec_bit_exact(rng):
+    m = _banded(512, 3, seed=1)
+    pp = preprocess(m, reorder="rcm")
+    assert pp.applied and pp.reason == "forced"
+    op = operator(m, reorder="rcm")
+    op0 = operator(m)
+    x = rng.integers(-3, 4, size=m.shape[1]).astype(np.float32)
+    assert np.array_equal(np.asarray(op @ x), np.asarray(op0 @ x))
+    y = rng.integers(-3, 4, size=m.shape[0]).astype(np.float32)
+    assert np.array_equal(np.asarray(op.T @ y), np.asarray(op0.T @ y))
+    xs = rng.integers(-3, 4, size=(m.shape[1], 4)).astype(np.float32)
+    assert np.array_equal(np.asarray(op @ xs), np.asarray(op0 @ xs))
+
+
+def test_preprocess_diagonal_unpermuted(rng):
+    m = _banded(256, 2, seed=2)
+    op = operator(m, reorder="rcm")
+    assert np.array_equal(np.asarray(op.diagonal()),
+                          np.asarray(F.csr_diagonal(m)))
+
+
+def test_preprocess_auto_declines_single_device():
+    m = _banded(2048, 3, seed=5)
+    pp = preprocess(m, reorder="auto", value_bytes=4)
+    assert not pp.applied
+    assert pp.reason.startswith("predicted_loss")
+    # ... and as_device honours the decision: no permutation attached
+    sd = ops.as_device(m, reorder="auto")
+    assert sd.pre_perm is None
+
+
+def test_preprocess_auto_applies_distributed():
+    m = _banded(2048, 3, seed=5)
+    pp = preprocess(m, reorder="auto", n_dev=8, value_bytes=4)
+    assert pp.applied
+    assert pp.reason.startswith("predicted_gain")
+    assert pp.bandwidth_after < pp.bandwidth_before
+
+
+def test_reordered_partition_ships_fewer_comm_bytes():
+    m = _banded(2048, 3, seed=5)
+    pp = preprocess(m, reorder="rcm")
+    n_dev = 8
+    off = D.partition_csr(m, n_dev).comm_bytes_per_device(value_bytes=4)
+    on = D.partition_csr(pp.matrix, n_dev).comm_bytes_per_device(
+        value_bytes=4)
+    assert on <= off
+    assert on < off / 10           # the band recovery is dramatic, not marginal
+
+
+def test_preprocess_off_is_identity():
+    m = _banded(128, 2, seed=3)
+    pp = preprocess(m, reorder="off")
+    assert not pp.applied and pp.matrix is m
+
+
+def test_preprocess_rejects_bad_mode():
+    m = _banded(64, 1)
+    with pytest.raises(ValueError, match="reorder"):
+        preprocess(m, reorder="bogus")
+    with pytest.raises(ValueError, match="reorder"):
+        ops.as_device(m, reorder="bogus")
+
+
+def test_preprocess_cache_key_separation(rng):
+    m = _banded(256, 2, seed=4)
+    sd_off = ops.as_device(m)
+    sd_on = ops.as_device(m, reorder="rcm")
+    assert sd_on is not sd_off
+    assert sd_on.pre_perm is not None and sd_off.pre_perm is None
+    assert ops.as_device(m, reorder="rcm") is sd_on     # cache hit
+
+
+def test_preprocess_non_square():
+    d = np.zeros((6, 9), np.float32)
+    d[1, 2] = 1.0
+    m = F.csr_from_dense(d)
+    pp = preprocess(m, reorder="auto")
+    assert not pp.applied and pp.reason == "non_square"
+    with pytest.raises(ValueError):
+        preprocess(m, reorder="rcm")

@@ -54,3 +54,45 @@ def test_rcm_shrinks_halo_width(rng):
     w_after = D.partition_csr(m2, 8, b_r=32).halo_w
     assert w_after < w_before
     assert w_after == 1
+
+
+def test_bandwidth_exported():
+    # the bugfix: bandwidth() is part of the module's public surface
+    assert "bandwidth" in R.__all__
+    assert R.bandwidth(M.poisson_2d(8, 8)) > 0
+
+
+def test_permutation_convention_documented_and_consistent(rng):
+    """perm[k] = old index at new position k — the ONE convention both
+    rcm_permutation and permute_symmetric use (the docstring bugfix)."""
+    m = M.poisson_2d(8, 8)
+    perm = R.rcm_permutation(m)
+    b = R.permute_symmetric(m, perm)
+    a = F.csr_to_dense(m)
+    np.testing.assert_array_equal(F.csr_to_dense(b),
+                                  a[np.ix_(perm, perm)])
+    assert "perm[k]" in R.rcm_permutation.__doc__
+
+
+def test_permute_symmetric_rejects_non_square():
+    d = np.zeros((4, 6))
+    d[0, 1] = 1.0
+    m = F.csr_from_dense(d)
+    with pytest.raises(ValueError, match="square"):
+        R.permute_symmetric(m, np.arange(4))
+
+
+def test_permute_symmetric_rejects_bad_perm_length(rng):
+    m = M.poisson_2d(6, 6)
+    with pytest.raises(ValueError, match="perm"):
+        R.permute_symmetric(m, np.arange(m.n_rows - 1))
+
+
+def test_permute_symmetric_output_is_valid_csr(rng):
+    """The sum_duplicates=False path must still produce sorted,
+    duplicate-free rows (the audited invariant of csr_from_coo)."""
+    m = M.samg(scale=0.002)
+    perm = rng.permutation(m.n_rows)
+    b = R.permute_symmetric(m, perm)
+    _, report = F.validate_csr(b)          # raises on any violation
+    assert not report.issues
